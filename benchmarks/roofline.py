@@ -1,0 +1,35 @@
+"""Roofline report: reads benchmarks/results/dryrun.json (written by the
+multi-pod dry-run) and emits the three roofline terms per (arch × shape ×
+mesh) — the §Roofline table of EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun.json"
+
+
+def main() -> None:
+    if not RESULTS.exists():
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    data = json.loads(RESULTS.read_text())
+    for key, rec in sorted(data.items()):
+        if not rec.get("ok"):
+            emit(f"roofline/{key}", 0.0, "FAILED")
+            continue
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound > 0 else 0.0
+        emit(f"roofline/{key}", rec.get("compile_s", 0) * 1e6,
+             f"compute_ms={r['compute_s']*1e3:.2f};"
+             f"memory_ms={r['memory_s']*1e3:.2f};"
+             f"collective_ms={r['collective_s']*1e3:.2f};"
+             f"dominant={r['dominant']};roofline_frac={frac:.3f};"
+             f"useful_ratio={rec.get('useful_ratio') and round(rec['useful_ratio'], 3)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table V (structural proxy): object-detection task with
+backbone-compressed students (Yolov5-BC/BNC analogue).
+
+The VisDrone dataset and Yolov5 weights are unavailable offline; the claim
+being validated is STRUCTURAL (DESIGN.md §6): compressing more of the model
+(backbone+neck vs backbone only) shrinks params/FLOPs and costs accuracy,
+and adding a third smaller-student device shifts the profile further. We
+reproduce it with WRN backbones on the synthetic detection-feature task:
+"BC" = students keep full width, "BNC" = students at half width.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed, TEACHER_STEPS, STUDENT_STEPS, BATCH
+from repro.core.pipeline import build_rocoin
+from repro.core.simulator import make_fleet
+from repro.data.images import ImageTaskConfig, SyntheticImages
+
+
+def main() -> None:
+    data = SyntheticImages(ImageTaskConfig(n_classes=10))
+    configs = [
+        ("yolo_bc_2dev", 2, ["wrn-16-1"]),      # backbone-compressed analogue
+        ("yolo_bnc_2dev", 2, ["wrn-10-1"]),     # backbone+neck analogue
+        ("yolo_bnc_3dev", 3, ["wrn-10-1"]),
+    ]
+    for name, n_dev, zoo in configs:
+        devices = make_fleet(n_dev, seed=5, mem_range=(1.0e6, 4e6))
+        def run():
+            return build_rocoin(jax.random.key(2), n_classes=10,
+                                teacher_depth=16, teacher_widen=2,
+                                teacher_steps=TEACHER_STEPS // 2,
+                                student_steps=STUDENT_STEPS // 2,
+                                batch=BATCH, p_th=0.5, devices=devices,
+                                zoo=zoo)
+        ens, us = timed(run, repeats=1)
+        acc = ens.accuracy(data, batches=1, batch=128)
+        per_dev = [f"{(g.student.params/4e6):.2f}M" for g in ens.plan.groups
+                   if g.student]
+        emit(f"table5/{name}", us,
+             f"acc={acc:.3f};per_device_params={'/'.join(per_dev)};"
+             f"teacher_acc={ens.teacher_acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

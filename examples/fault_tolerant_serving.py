@@ -1,0 +1,61 @@
+"""Fault-tolerant serving under a failure schedule + elastic re-planning.
+
+Injects crashes over a stream of requests, shows the quorum masking them,
+then permanently removes devices and re-plans (students redeploy by
+partition overlap — no retraining).
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import build_rocoin, profile_student
+from repro.core.simulator import FailureModel, make_fleet
+from repro.data.images import ImageTaskConfig, SyntheticImages
+from repro.runtime.failures import FailureEvent, FailureInjector, replan, remap_students
+from repro.runtime.serving import server_from_ensemble
+
+
+def main():
+    data = SyntheticImages(ImageTaskConfig(n_classes=10, noise=0.4, shift=2))
+    devices = make_fleet(6, seed=1, mem_range=(1.0e6, 4e6))
+    ens = build_rocoin(jax.random.key(0), n_classes=10, teacher_depth=10,
+                       teacher_widen=2, teacher_steps=40, student_steps=15,
+                       batch=64, p_th=0.25, devices=devices,
+                       zoo=["wrn-10-1"], data=data)
+    print("initial plan:", ens.plan.summary())
+
+    injector = FailureInjector([
+        FailureEvent(at_request=3, device=devices[0].name, kind="crash"),
+        FailureEvent(at_request=5, device=devices[1].name, kind="crash"),
+        FailureEvent(at_request=8, device=devices[0].name, kind="recover"),
+    ])
+
+    x, y = data.batch(32, 999)
+    xj = jnp.asarray(x)
+    for req in range(10):
+        down = injector.tick()
+        srv = server_from_ensemble(
+            ens, failure=FailureModel(forced_failures=sorted(down),
+                                      outages=False), seed=req)
+        res = srv.serve(xj)
+        acc = float((res.logits.argmax(-1) == y).mean())
+        print(f"req {req}: down={sorted(down) or '-'} acc={acc:.3f} "
+              f"degraded={res.degraded} "
+              f"portions={int(res.arrived.sum())}/{ens.plan.K}")
+
+    # permanent loss → elastic re-plan on survivors
+    print("\ndevice d0 lost permanently; re-planning on survivors...")
+    survivors = [d for d in devices if d.name != devices[0].name]
+    x_ex, _ = data.batch(1, 0)
+    students_profiled = [profile_student("wrn-10-1", 10, 16, x_ex)]
+    new_plan = replan(survivors, ens.plan.A, students_profiled,
+                      d_th=None, p_th=0.25)
+    mapping = remap_students(ens.plan, new_plan)
+    print("new plan:", new_plan.summary())
+    print("student redeployment map (new slot -> old student):", mapping)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""LM training end-to-end driver demo: ~200 steps of a reduced (~10M-param)
+llama3.2 with checkpoint/restart and int8 gradient compression — then a
+simulated crash + resume, proving restart continuity.
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+"""
+import shutil
+import tempfile
+
+from repro.launch.train import run
+
+
+def main():
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    print("=== phase 1: 120 steps with async checkpoints every 40 ===")
+    _, losses1 = run("llama3.2-1b", tiny=True, steps=120, batch=8, seq=128,
+                     ckpt_dir=ckpt, ckpt_every=40, compression="int8",
+                     log_every=20)
+    print(f"phase-1 loss: {losses1[0]:.3f} -> {losses1[-1]:.3f}")
+
+    print("\n=== simulated crash; resuming from the latest checkpoint ===")
+    _, losses2 = run("llama3.2-1b", tiny=True, steps=80, batch=8, seq=128,
+                     ckpt_dir=ckpt, ckpt_every=40, compression="int8",
+                     resume=True, log_every=20)
+    print(f"phase-2 loss: {losses2[0]:.3f} -> {losses2[-1]:.3f}")
+    assert losses2[-1] < losses1[0], "training did not progress across restart"
+    print("restart continuity OK")
+    shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — RoCoIn (failure-resilient distributed inference with model
+compression) as a production-grade multi-pod JAX/Pallas framework."""
+__version__ = "1.0.0"

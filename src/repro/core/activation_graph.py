@@ -1,0 +1,63 @@
+"""Filter-activation graph construction (RoCoIn §IV-B2, following NoNN).
+
+For every validation example, the *average activity* ``a_m`` of filter ``m``
+is the mean of the corresponding output channel of the teacher's final
+convolution layer (for LM teachers: the mean absolute activation of the
+final-block hidden channel — see DESIGN.md §5). The graph weight between
+filters m, m' is
+
+    A_{mm'} = Σ_val  a_m · a_m' · |a_m − a_m'|
+
+which encourages edges between very-important and less-important filters, so
+normalized cut distributes important filters *across* partitions (importance
+balancing).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def average_activity(feature_maps: jnp.ndarray) -> jnp.ndarray:
+    """Per-example average activity of each channel.
+
+    feature_maps: (N, H, W, C) conv outputs or (N, S, C) sequence hiddens or
+    (N, C) already-pooled. Returns (N, C) nonnegative activities.
+    """
+    x = jnp.asarray(feature_maps)
+    if x.ndim == 4:
+        act = jnp.mean(jax.nn.relu(x), axis=(1, 2))
+    elif x.ndim == 3:
+        act = jnp.mean(jnp.abs(x), axis=1)
+    elif x.ndim == 2:
+        act = jnp.abs(x)
+    else:
+        raise ValueError(f"unsupported feature rank {x.ndim}")
+    return act.astype(jnp.float32)
+
+
+def activation_graph(activities: jnp.ndarray) -> jnp.ndarray:
+    """Build the weighted adjacency A (M×M) from per-example activities (N,M).
+
+    A_{mm'} = Σ_n a_nm · a_nm' · |a_nm − a_nm'|, zero diagonal, symmetric.
+    """
+    a = jnp.asarray(activities, jnp.float32)          # (N, M)
+    prod = jnp.einsum("nm,nk->nmk", a, a)             # a_m · a_m'
+    diff = jnp.abs(a[:, :, None] - a[:, None, :])     # |a_m − a_m'|
+    A = jnp.sum(prod * diff, axis=0)
+    A = 0.5 * (A + A.T)
+    M = A.shape[0]
+    return A * (1.0 - jnp.eye(M, dtype=A.dtype))
+
+
+def degree(A: jnp.ndarray) -> jnp.ndarray:
+    """Node degrees z_m = Σ_m' A_{mm'}."""
+    return jnp.sum(A, axis=1)
+
+
+def filter_importance(activities: jnp.ndarray) -> np.ndarray:
+    """Mean activity per filter — used as the knowledge-size weight."""
+    return np.asarray(jnp.mean(activities, axis=0))

@@ -1,0 +1,154 @@
+"""Student assignment: Kuhn–Munkres optimal matching (RoCoIn §IV-B3).
+
+The 3-D matching (device group × knowledge partition × student arch) is
+reduced to bipartite matching: for a fixed (group, partition) pair the best
+student is chosen analytically under the group's memory constraint, giving
+the edge weight of Eq. 5:
+
+    w(G_k, P_k') = max_{s_j ∈ S_k}  R_j / ( C_para(P_k') · (R_j/c_core + Q_j/r) )
+
+The Hungarian algorithm (O(K³)) then finds the max-weight perfect matching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.grouping import Device
+
+
+@dataclasses.dataclass(frozen=True)
+class StudentArch:
+    """A candidate student model architecture."""
+    name: str
+    flops: float        # R_j — computation load per inference (FLOPs)
+    params: float       # C_j^para — parameter memory (bytes)
+    out_bytes: float    # Q_j — output size to transmit (bytes)
+    capacity: float     # representational capacity score (≈ params)
+
+
+def hungarian(weights: np.ndarray) -> np.ndarray:
+    """Max-weight square assignment. Returns col index for each row.
+
+    Jonker-Volgenant style O(n³) shortest augmenting path implementation
+    (cost = -weights for maximization).
+    """
+    w = np.asarray(weights, np.float64)
+    n, m = w.shape
+    assert n == m, "assignment matrix must be square (pad first)"
+    cost = -w
+    INF = 1e18
+    u = np.zeros(n + 1)
+    v = np.zeros(n + 1)
+    p = np.zeros(n + 1, np.int64)      # p[j] = row matched to column j
+    way = np.zeros(n + 1, np.int64)
+    for i in range(1, n + 1):
+        p[0] = i
+        j0 = 0
+        minv = np.full(n + 1, INF)
+        used = np.zeros(n + 1, bool)
+        while True:
+            used[j0] = True
+            i0, delta, j1 = p[j0], INF, -1
+            for j in range(1, n + 1):
+                if used[j]:
+                    continue
+                cur = cost[i0 - 1, j - 1] - u[i0] - v[j]
+                if cur < minv[j]:
+                    minv[j] = cur
+                    way[j] = j0
+                if minv[j] < delta:
+                    delta = minv[j]
+                    j1 = j
+            for j in range(n + 1):
+                if used[j]:
+                    u[p[j]] += delta
+                    v[j] -= delta
+                else:
+                    minv[j] -= delta
+            j0 = j1
+            if p[j0] == 0:
+                break
+        while j0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+    ans = np.zeros(n, np.int64)
+    for j in range(1, n + 1):
+        ans[p[j] - 1] = j - 1
+    return ans
+
+
+def feasible_students(group: Sequence[Device],
+                      students: Sequence[StudentArch]) -> List[StudentArch]:
+    """S_k ⊂ S: students whose memory fits EVERY device of the group
+    (Eq. 1g uses min over the group)."""
+    mem = min(d.c_mem for d in group)
+    return [s for s in students if s.params <= mem]
+
+
+def best_student_for(group: Sequence[Device], part_size: float,
+                     students: Sequence[StudentArch],
+                     cap_scale: Optional[float] = None
+                     ) -> Tuple[Optional[StudentArch], float]:
+    """Eq. 5 inner max for one (group, partition) pair, with constraint (1h)
+    operationalized: a student is *capable* of a partition when its capacity
+    covers the partition's knowledge fraction (ε_th threshold). Among capable
+    students we minimize latency (Eq. 1a is the outer objective); Eq. 5's
+    capacity-to-delay ratio breaks ties / ranks incapable fallbacks. The
+    group latency is its *fastest* member (min over devices, Eq. 1a inner).
+    """
+    S_k = feasible_students(group, students)
+    if not S_k:
+        return None, 0.0
+    cap_scale = cap_scale if cap_scale is not None else max(
+        s.capacity for s in students)
+
+    def latency(s: StudentArch) -> float:
+        return min(s.flops / d.c_core + 8.0 * s.out_bytes / d.r_tran
+                   for d in group)
+
+    def weight(s: StudentArch) -> float:
+        return s.capacity / (max(part_size, 1e-9) * max(latency(s), 1e-12))
+
+    req = part_size * cap_scale
+    capable = [s for s in S_k if s.capacity >= req]
+    if capable:
+        best = min(capable, key=latency)       # fastest sufficient student
+    else:
+        best = max(S_k, key=lambda s: s.capacity)  # closest to capable (1h)
+    return best, weight(best)
+
+
+def assignment_weights(groups: Sequence[Sequence[Device]],
+                       part_sizes: Sequence[float],
+                       students: Sequence[StudentArch]) -> np.ndarray:
+    """w(G_k, P_k') matrix (K×K), Eq. 5."""
+    K = len(groups)
+    Kp = len(part_sizes)
+    W = np.zeros((K, Kp))
+    for a, g in enumerate(groups):
+        for b, size in enumerate(part_sizes):
+            _, W[a, b] = best_student_for(g, size, students)
+    return W
+
+
+def match_groups_to_partitions(groups: Sequence[Sequence[Device]],
+                               part_sizes: Sequence[float],
+                               students: Sequence[StudentArch]
+                               ) -> List[Tuple[int, int, Optional[StudentArch]]]:
+    """KM matching → list of (group_idx, partition_idx, chosen_student)."""
+    K = max(len(groups), len(part_sizes))
+    W = np.zeros((K, K))
+    Wreal = assignment_weights(groups, part_sizes, students)
+    W[:Wreal.shape[0], :Wreal.shape[1]] = Wreal
+    cols = hungarian(W)
+    out = []
+    for g_idx, p_idx in enumerate(cols):
+        if g_idx >= len(groups) or p_idx >= len(part_sizes):
+            continue
+        student, _ = best_student_for(groups[g_idx], part_sizes[p_idx], students)
+        out.append((g_idx, int(p_idx), student))
+    return out

@@ -1,0 +1,131 @@
+"""Device grouping: modified follow-the-leader clustering (RoCoIn §IV-B1).
+
+Devices with similar capacity (Euclid distance over (c_mem, c_core), Eq. 2)
+and satisfactory *cumulative* transmission reliability are grouped to act as
+replicas of each other. Group reliability constraint (Eq. 1f):
+
+    Π_{n ∈ G_k} p_n^out ≤ p^th
+
+i.e. the probability that EVERY member of the group fails its transmission
+must not exceed p^th.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Device:
+    """Edge-device resource profile (paper Table I tuple)."""
+    name: str
+    c_core: float      # FLOP/s budget
+    c_mem: float       # memory budget, bytes
+    r_tran: float      # transmission rate to the source, bit/s
+    p_out: float       # transmission outage probability ∈ (0,1)
+
+    def capacity_vec(self) -> np.ndarray:
+        return np.array([self.c_mem, self.c_core], np.float64)
+
+
+def similarity(a: Device, b: Device, scale: Optional[np.ndarray] = None) -> float:
+    """Eq. 2 — Euclid distance of capacity vectors (optionally normalized)."""
+    va, vb = a.capacity_vec(), b.capacity_vec()
+    if scale is not None:
+        va, vb = va / scale, vb / scale
+    return float(np.sqrt(((va - vb) ** 2).sum()))
+
+
+def group_outage(devices: Sequence[Device]) -> float:
+    """Π p_n^out — probability that the whole group fails."""
+    p = 1.0
+    for d in devices:
+        p *= d.p_out
+    return p
+
+
+@dataclasses.dataclass
+class Grouping:
+    groups: List[List[Device]]
+
+    @property
+    def K(self) -> int:
+        return len(self.groups)
+
+    def centroids(self) -> np.ndarray:
+        return np.stack([np.mean([d.capacity_vec() for d in g], axis=0)
+                         for g in self.groups])
+
+
+def follow_the_leader(devices: Sequence[Device], d_th: float, p_th: float,
+                      *, normalize: bool = True, seed: int = 0,
+                      repair: bool = False) -> Grouping:
+    """Alg. 1 lines 1–11. Iteratively add each device to the first group whose
+    centroid is within d_th — but only while the group's cumulative outage is
+    still ABOVE p_th (a group that already satisfies its reliability target
+    stops absorbing replicas, freeing devices to form new groups). Devices
+    matching no group start a new one.
+    """
+    devices = list(devices)
+    if not devices:
+        return Grouping([])
+    scale = None
+    if normalize:
+        caps = np.stack([d.capacity_vec() for d in devices])
+        scale = np.maximum(caps.std(axis=0), 1e-9)
+
+    rng = np.random.default_rng(seed)
+    order = list(range(len(devices)))
+    first = order[0]
+
+    groups: List[List[Device]] = [[devices[first]]]
+    cents: List[np.ndarray] = [devices[first].capacity_vec()]
+
+    def cent_dist(c: np.ndarray, d: Device) -> float:
+        v = d.capacity_vec()
+        if scale is not None:
+            return float(np.sqrt((((c - v) / scale) ** 2).sum()))
+        return float(np.sqrt(((c - v) ** 2).sum()))
+
+    for i in order[1:]:
+        d = devices[i]
+        placed = False
+        for gi, g in enumerate(groups):
+            if cent_dist(cents[gi], d) <= d_th and group_outage(g) > p_th:
+                g.append(d)
+                cents[gi] = np.mean([x.capacity_vec() for x in g], axis=0)
+                placed = True
+                break
+        if not placed:
+            groups.append([d])
+            cents.append(d.capacity_vec())
+
+    if repair:
+        # Beyond-paper repair pass: Alg. 1 can strand a high-outage device as
+        # a singleton once every other group already satisfies (1f) — the
+        # paper acknowledges the resulting infeasibility (§V). Merge each
+        # violating group into its nearest neighbour until (1f) holds
+        # everywhere or one group remains.
+        while len(groups) > 1:
+            bad = [gi for gi, g in enumerate(groups)
+                   if group_outage(g) > p_th]
+            if not bad:
+                break
+            gi = bad[0]
+            cents = [np.mean([x.capacity_vec() for x in g], axis=0)
+                     for g in groups]
+            dists = [np.linalg.norm((cents[gi] - c) /
+                                    (scale if scale is not None else 1.0))
+                     for c in cents]
+            dists[gi] = float("inf")
+            tgt = int(np.argmin(dists))
+            groups[tgt].extend(groups[gi])
+            del groups[gi]
+    return Grouping(groups)
+
+
+def grouping_feasible(grouping: Grouping, p_th: float) -> bool:
+    """Eq. 1f for every group."""
+    return all(group_outage(g) <= p_th for g in grouping.groups)

@@ -1,0 +1,176 @@
+"""RoCoIn at LM scale: the paper's technique applied to transformer teachers.
+
+The analogue of the teacher's "final convolution filters" is the final-block
+hidden feature channels feeding the LM head (DESIGN.md §5). The same
+pipeline applies:
+
+  1. run validation tokens through the teacher LM; average |activation| per
+     final-hidden channel = a_m,
+  2. activation graph A_mm' (Eq. §IV-B2) over d_model channels,
+  3. Ncut partition into K channel groups (one per device group),
+  4. students = width/depth-reduced LMs whose final feature dim equals the
+     partition size; each student mimics its channel slice (AT loss) + the
+     teacher's token distribution (KD loss),
+  5. quorum serving: student feature portions concatenate → shared LM head.
+
+This module produces plans + student configs; `distill_lm_students` runs a
+small-scale distillation (CPU-sized in tests/examples — the full-scale path
+uses the same functions under the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import activation_graph as AG
+from repro.core import distill as DS
+from repro.core import ncut as NC
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.planner import Plan, make_plan, tune_d_th
+from repro.models import api
+from repro.models import transformer as T
+
+
+def lm_activation_graph(params, cfg: ModelConfig, tokens: jnp.ndarray
+                        ) -> np.ndarray:
+    """Filter-activation graph over the teacher LM's final hidden channels."""
+    hidden = lm_final_hidden(params, cfg, tokens)      # (B, S, d)
+    acts = AG.average_activity(hidden)                 # (B, d)
+    return np.asarray(AG.activation_graph(acts))
+
+
+def lm_final_hidden(params, cfg: ModelConfig, tokens: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Forward to the pre-head hidden states (dense/moe families)."""
+    x = params["embed"]["embedding"][tokens].astype(cfg.compute_dtype)
+    B, S = tokens.shape
+    positions = T.default_positions(cfg, B, S)
+    body = lambda xx, lp: (T.block_apply(lp, cfg, xx, positions), None)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return T.norm_apply(cfg, params["out_norm"], x)
+
+
+def student_config(teacher: ModelConfig, part_dim: int, *,
+                   width_frac: float = 0.5, depth_frac: float = 0.5
+                   ) -> ModelConfig:
+    """A width/depth-reduced student of the teacher's family whose output
+    feature dim equals its knowledge-partition size."""
+    d = max(int(teacher.d_model * width_frac) // 16 * 16, 32)
+    heads = max(teacher.n_heads // 2, 2) if teacher.n_heads else 0
+    return teacher.with_(
+        name=f"{teacher.name}-student{part_dim}",
+        n_layers=max(int(teacher.n_layers * depth_frac), 1),
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=max(min(teacher.n_kv_heads, heads), 1) if heads else 0,
+        d_ff=0 if teacher.d_ff == 0 else max(int(teacher.d_ff * width_frac), 64),
+        n_experts=0, top_k=0,   # students are dense (paper: compact students)
+        pad_heads_to=0,
+    )
+
+
+def lm_student_archs(teacher: ModelConfig, part_dims: Sequence[int],
+                     fracs: Sequence[float] = (0.25, 0.5, 1.0)
+                     ) -> List[StudentArch]:
+    """Profile the student zoo analytically (6·N FLOPs/token) for Eq. 5."""
+    out = []
+    for frac in fracs:
+        cfg = student_config(teacher, max(part_dims), width_frac=frac,
+                             depth_frac=frac)
+        n = (cfg.n_layers * (4 * cfg.d_model * cfg.n_heads * cfg.head_dim
+                             + 3 * cfg.d_model * cfg.d_ff)
+             + cfg.vocab * cfg.d_model)
+        out.append(StudentArch(
+            name=f"lm-student-{frac}", flops=2.0 * n, params=2.0 * n,
+            out_bytes=2.0 * max(part_dims), capacity=float(n)))
+    return out
+
+
+@dataclasses.dataclass
+class LMStudent:
+    cfg: ModelConfig
+    params: Any
+    proj: jnp.ndarray          # (d_student, part_dim) feature head
+    partition: np.ndarray      # teacher channel indices
+
+
+def init_lm_student(key, teacher: ModelConfig, part: np.ndarray,
+                    width_frac: float = 0.5) -> LMStudent:
+    cfg = student_config(teacher, len(part), width_frac=width_frac)
+    k1, k2 = jax.random.split(key)
+    params = api.init(k1, cfg)
+    proj = (jax.random.normal(k2, (cfg.d_model, len(part)), jnp.float32)
+            / cfg.d_model ** 0.5)
+    return LMStudent(cfg, params, proj, np.asarray(part))
+
+
+def student_portion(st: LMStudent, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Student's feature portion for its partition: (B, S, part_dim)."""
+    hidden = lm_final_hidden(st.params, st.cfg, tokens)
+    return hidden.astype(jnp.float32) @ st.proj
+
+
+def distill_lm_students(key, teacher_params, teacher_cfg: ModelConfig,
+                        parts: Sequence[np.ndarray], data_batches,
+                        *, steps: int = 20, lr: float = 1e-3,
+                        dcfg: DS.DistillConfig = DS.DistillConfig(alpha=1.0)
+                        ) -> List[LMStudent]:
+    """Distill one student per partition: KD on teacher logits + AT on the
+    partition's channel slice of the final hidden states (Eq. 6)."""
+    students = [init_lm_student(jax.random.fold_in(key, i), teacher_cfg, p)
+                for i, p in enumerate(parts)]
+
+    def make_step(st: LMStudent):
+        part = jnp.asarray(st.partition)
+
+        @jax.jit
+        def step(params, proj, opt, tokens):
+            t_hidden = lm_final_hidden(teacher_params, teacher_cfg, tokens)
+            t_logits = T._lm_head(teacher_params, teacher_cfg, t_hidden)
+            t_part = t_hidden.astype(jnp.float32)[..., part]
+
+            def loss_fn(p, pr):
+                hidden = lm_final_hidden(p, st.cfg, tokens)
+                feats = hidden.astype(jnp.float32) @ pr
+                labels = jnp.argmax(t_logits, -1)
+                logits = T._lm_head(p, st.cfg, hidden)
+                kd = DS.kd_loss(logits.reshape(-1, st.cfg.vocab),
+                                t_logits.reshape(-1, teacher_cfg.vocab),
+                                labels.reshape(-1), dcfg)
+                at = DS.at_loss(feats.reshape(-1, feats.shape[-1]),
+                                t_part.reshape(-1, t_part.shape[-1]))
+                return kd + dcfg.beta * at
+
+            loss, (gp, gproj) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                params, proj)
+            params = jax.tree.map(lambda a, g: a - lr * g.astype(a.dtype),
+                                  params, gp)
+            proj = proj - lr * gproj
+            return params, proj, loss
+
+        return step
+
+    for st in students:
+        step = make_step(st)
+        opt = None
+        for i, tokens in enumerate(data_batches()):
+            if i >= steps:
+                break
+            st.params, st.proj, _ = step(st.params, st.proj, opt, tokens)
+    return students
+
+
+def plan_lm_rocoin(devices: Sequence[Device], teacher_params,
+                   teacher_cfg: ModelConfig, val_tokens: jnp.ndarray,
+                   *, p_th: float = 0.25) -> Tuple[Plan, np.ndarray]:
+    """End-to-end LM plan: graph → grouping → Ncut → KM (Alg. 1)."""
+    A = lm_activation_graph(teacher_params, teacher_cfg, val_tokens)
+    zoo = lm_student_archs(teacher_cfg, [A.shape[0] // max(len(devices) // 2, 1)])
+    plan = tune_d_th(devices, A, zoo, p_th=p_th)
+    return plan, A

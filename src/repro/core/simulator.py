@@ -1,0 +1,161 @@
+"""Runtime simulator for distributed inference (RoCoIn §V).
+
+Implements the paper's evaluation model exactly:
+  - per-device latency  = C_j^flops / c_n^core + Q_j / r_n^tran   (Eq. 1a)
+  - Rayleigh channel → exponential channel gain → outage events with
+    probability p_n^out; crashed/timeout devices contribute nothing,
+  - a partition's output arrives when its FIRST live replica reports
+    (replicas mask failures), inference completes when every partition has
+    at least one arrival (quorum), latency = slowest partition,
+  - missing partitions are zeroed at aggregation (the paper's §V emulation),
+    degrading accuracy instead of failing the query.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.grouping import Device
+from repro.core.planner import Plan
+
+
+@dataclasses.dataclass
+class TrialResult:
+    latency: float               # ∞ if no partition ever arrives
+    arrived: np.ndarray          # bool per partition
+    failed_devices: List[str]
+
+    @property
+    def complete(self) -> bool:
+        return bool(self.arrived.all())
+
+    @property
+    def coverage(self) -> float:
+        return float(self.arrived.mean()) if len(self.arrived) else 0.0
+
+
+@dataclasses.dataclass
+class FailureModel:
+    """Pluggable failure source. `crash_prob` models device crashes (power
+    depletion, preemption); transmission outages use each device's p_out
+    (Rayleigh channel). `outages=False` disables the stochastic channel
+    (deterministic testing)."""
+    crash_prob: float = 0.0
+    forced_failures: Optional[Sequence[str]] = None   # device names down
+    outages: bool = True
+
+    def device_alive(self, rng: np.random.Generator, d: Device) -> bool:
+        if self.forced_failures and d.name in self.forced_failures:
+            return False
+        if self.crash_prob > 0 and rng.random() < self.crash_prob:
+            return False
+        if not self.outages:
+            return True
+        # transmission outage (Rayleigh channel): outage w.p. p_out
+        return rng.random() >= d.p_out
+
+
+def simulate_trial(plan: Plan, rng: np.random.Generator,
+                   failure: Optional[FailureModel] = None) -> TrialResult:
+    failure = failure or FailureModel()
+    K = plan.K
+    arrived = np.zeros(K, bool)
+    lat = np.full(K, np.inf)
+    failed: List[str] = []
+    for slot, g in enumerate(plan.groups):
+        if g.student is None:
+            continue
+        for d in g.devices:
+            if not failure.device_alive(rng, d):
+                failed.append(d.name)
+                continue
+            t = g.student.flops / d.c_core + 8.0 * g.student.out_bytes / d.r_tran
+            lat[slot] = min(lat[slot], t)
+            arrived[slot] = True
+    latency = float(lat[arrived].max()) if arrived.any() else float("inf")
+    return TrialResult(latency, arrived, failed)
+
+
+def simulate(plan: Plan, trials: int = 100, seed: int = 0,
+             failure: Optional[FailureModel] = None) -> Dict[str, float]:
+    rng = np.random.default_rng(seed)
+    lats, covs, completes = [], [], 0
+    for _ in range(trials):
+        r = simulate_trial(plan, rng, failure)
+        if np.isfinite(r.latency):
+            lats.append(r.latency)
+        covs.append(r.coverage)
+        completes += int(r.complete)
+    return {
+        "mean_latency": float(np.mean(lats)) if lats else float("inf"),
+        "p99_latency": float(np.percentile(lats, 99)) if lats else float("inf"),
+        "mean_coverage": float(np.mean(covs)),
+        "complete_rate": completes / trials,
+    }
+
+
+def accuracy_under_failures(plan: Plan, accuracy_fn: Callable[[np.ndarray], float],
+                            n_failed: int, trials: int = 30, seed: int = 0
+                            ) -> float:
+    """Paper Fig. 5/6: randomly delete `n_failed` devices, zero the portions
+    whose every replica is gone, average accuracy_fn(arrived_mask)."""
+    rng = np.random.default_rng(seed)
+    all_devices = [d.name for g in plan.groups for d in g.devices]
+    accs = []
+    for _ in range(trials):
+        down = set(rng.choice(all_devices, size=min(n_failed, len(all_devices)),
+                              replace=False))
+        arrived = np.zeros(plan.K, bool)
+        for slot, g in enumerate(plan.groups):
+            arrived[slot] = any(d.name not in down for d in g.devices)
+        accs.append(accuracy_fn(arrived))
+    return float(np.mean(accs))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous fleet generation (paper §V-A + Table IV)
+# ---------------------------------------------------------------------------
+
+def make_fleet(n: int = 8, *, seed: int = 0,
+               flops_range: Tuple[float, float] = (5e6, 30e6),
+               rate_range: Tuple[float, float] = (0.5e3, 1e3),
+               mem_range: Tuple[float, float] = (0.5e6, 4e6),
+               success_prob: float = 0.8) -> List[Device]:
+    """The paper's setup: 8 devices, 5–30 MFLOPS, 0.5–1 kbps, avg success 0.8."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        out.append(Device(
+            name=f"d{i}",
+            c_core=float(rng.uniform(*flops_range)),
+            c_mem=float(rng.uniform(*mem_range)),
+            r_tran=float(rng.uniform(*rate_range)),
+            p_out=float(np.clip(1 - success_prob + rng.normal(0, 0.05), 0.01, 0.99)),
+        ))
+    return out
+
+
+def make_fleet_heterogeneity(level: int, n: int = 8, seed: int = 0,
+                             base_flops: float = 5e6,
+                             base_rate: float = 300.0) -> List[Device]:
+    """Paper Table IV heterogeneity levels 0..5: FLOPS spread 0..30 M and
+    data-rate spread 0..500 bps around the base point. Memory is ample and
+    uniform — Table IV varies only compute and transmission (the Fig. 7
+    mechanism is the compute/link straggler, not the memory bottleneck)."""
+    spread_flops = [0, 10e6, 15e6, 20e6, 25e6, 30e6][level]
+    spread_rate = [0, 100, 200, 300, 400, 500][level]
+    rng = np.random.default_rng(seed)
+    base_flops = max(base_flops, spread_flops / 2 + 2e6)  # keep c_core > 0
+    base_rate = max(base_rate, spread_rate / 2 + 50.0)
+    out = []
+    for i in range(n):
+        out.append(Device(
+            name=f"d{i}",
+            c_core=float(base_flops + spread_flops * rng.uniform(-0.5, 0.5)),
+            c_mem=4e6,
+            r_tran=float(base_rate + spread_rate * rng.uniform(-0.5, 0.5)),
+            p_out=float(rng.uniform(0.1, 0.3)),
+        ))
+    return out

@@ -1,0 +1,78 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode — the kernel body
+runs in Python for correctness validation; on TPU the same call compiles to
+Mosaic. `interpret=None` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quorum_aggregate as _qa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import topk_gating as _tg
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: Optional[bool] = None):
+    """GQA prefill attention. q: (B, KV, G, Sq, D); k/v: (B, KV, Skv, D)."""
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv,
+                               interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, *, block_kv: int = 256,
+                     interpret: Optional[bool] = None):
+    """One-token GQA decode. q: (B, KV, G, D); caches: (B, KV, S, D)."""
+    return _dec.decode_attention(q, k_cache, v_cache, length,
+                                 block_kv=block_kv,
+                                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Mamba2 chunked scan. x: (BH, L, P); dt: (BH, L); A: (BH,);
+    Bm/Cm: (BH, L, N)."""
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: Optional[bool] = None):
+    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def quorum_aggregate(portions, weights, bias, mask, *, block_batch: int = 128,
+                     interpret: Optional[bool] = None):
+    """Fused masked-concat + FC merge of student portions (RoCoIn runtime)."""
+    return _qa.quorum_aggregate(portions, weights, bias, mask,
+                                block_batch=block_batch,
+                                interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_gating(logits, k: int, *, block_rows: int = 512,
+                interpret: Optional[bool] = None):
+    """MoE router: fused softmax + top-k + renormalize."""
+    return _tg.topk_gating(logits, k, block_rows=block_rows,
+                           interpret=_auto_interpret(interpret))

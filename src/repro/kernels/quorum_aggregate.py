@@ -1,0 +1,78 @@
+"""RoCoIn quorum aggregation kernel: fused mask → concat → FC merge.
+
+The source device aggregates the K student portions (some missing after
+failures) and applies the FC head (paper Fig. 1 runtime phase). Fusing the
+three steps means missing portions cost zero HBM traffic and the concat
+buffer is never materialized:
+
+    out (B, C) = Σ_k  mask_k · portion_k (B, Dk) @ W_k (Dk, C)   + bias
+
+Grid (nb, K): K is sequential, the (bb, C) accumulator lives in scratch.
+Portions are equal-width (planner pads partitions to a common width before
+deployment — TPU-friendly layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(mask_ref, p_ref, w_ref, b_ref, o_ref, acc_ref, *, K: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[k] != 0)
+    def _accum():
+        p = p_ref[0].astype(jnp.float32)           # (bb, Dk)
+        w = w_ref[0].astype(jnp.float32)           # (Dk, C)
+        acc_ref[...] += jax.lax.dot_general(
+            p, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == K - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] + b_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+def quorum_aggregate(portions: jnp.ndarray, weights: jnp.ndarray,
+                     bias: jnp.ndarray, mask: jnp.ndarray, *,
+                     block_batch: int = 128, interpret: bool = False
+                     ) -> jnp.ndarray:
+    """portions: (K, B, Dk); weights: (K, Dk, C); bias: (C,);
+    mask: (K,) int32 (1 = portion arrived). Returns logits (B, C)."""
+    K, B, Dk = portions.shape
+    C = weights.shape[-1]
+    bb = min(block_batch, B)
+    pad = (-B) % bb
+    if pad:
+        portions = jnp.pad(portions, ((0, 0), (0, pad), (0, 0)))
+    nb = portions.shape[1] // bb
+
+    kernel = functools.partial(_agg_kernel, K=K)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, K),
+        in_specs=[
+            pl.BlockSpec((1, bb, Dk), lambda i, k, *_: (k, i, 0)),
+            pl.BlockSpec((1, Dk, C), lambda i, k, *_: (k, 0, 0)),
+            pl.BlockSpec((C,), lambda i, k, *_: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, C), lambda i, k, *_: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bb, C), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((portions.shape[1], C), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(mask, jnp.int32), portions, weights, bias)
+    return out[:B]

@@ -1,0 +1,61 @@
+"""MoE top-k gating kernel: fused softmax + iterative top-k + renormalize.
+
+One pass over the router logits: for each token row, softmax over E experts,
+then k rounds of (argmax, mask) — k is small (≤8) so the unrolled loop beats
+a general sort, and the row never leaves VMEM between steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _gating_kernel(x_ref, w_ref, i_ref, *, k: int, E: int):
+    logits = x_ref[...].astype(jnp.float32)        # (bn, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    total = jnp.zeros(probs.shape[:1], jnp.float32)
+    cur = probs
+    ws, idxs = [], []
+    for _ in range(k):
+        idx = jnp.argmax(cur, axis=-1)             # (bn,)
+        w = jnp.max(cur, axis=-1)
+        ws.append(w)
+        idxs.append(idx)
+        total = total + w
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, cur.shape, 1)
+                  == idx[:, None])
+        cur = jnp.where(onehot, NEG_INF, cur)
+    wmat = jnp.stack(ws, axis=-1)                  # (bn, k)
+    wmat = wmat / jnp.maximum(total, 1e-9)[:, None]
+    i_ref[...] = jnp.stack(idxs, axis=-1).astype(jnp.int32)
+    w_ref[...] = wmat.astype(w_ref.dtype)
+
+
+def topk_gating(logits: jnp.ndarray, k: int, *, block_rows: int = 512,
+                interpret: bool = False):
+    """logits: (N, E) → (weights (N, k) f32 renormalized, indices (N, k) i32)."""
+    N, E = logits.shape
+    bn = min(block_rows, N)
+    pad = (-N) % bn
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)), constant_values=NEG_INF)
+    nb = logits.shape[0] // bn
+
+    kernel = functools.partial(_gating_kernel, k=k, E=E)
+    w, i = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((bn, E), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((bn, k), lambda b: (b, 0)),
+                   pl.BlockSpec((bn, k), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((logits.shape[0], k), jnp.float32),
+                   jax.ShapeDtypeStruct((logits.shape[0], k), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return w[:N], i[:N]

@@ -1,0 +1,470 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+compute term    = HLO_FLOPs / peak_FLOP/s          (per-chip)
+memory term     = HLO_bytes / HBM_bw               (per-chip)
+collective term = modeled wire bytes / link_bw     (per-chip)
+
+XLA's built-in ``cost_analysis()`` does NOT multiply while-loop bodies by
+their trip count, so a scan-over-layers model under-reports FLOPs by ~L×.
+We therefore parse the optimized (post-SPMD) HLO text ourselves:
+
+  - instruction-level symbol table (name → shape/bytes) per computation,
+  - dot FLOPs = 2 · |result| · Π contracting-dim sizes (from lhs shape),
+  - convolution FLOPs from kernel shape / feature group count,
+  - bytes = |result| + Σ |operands| at fusion *boundaries* only (fusion
+    internals live in registers/VMEM — the right HBM-traffic model),
+  - while bodies recursively expanded × trip count (parsed from the loop
+    condition's comparison constant),
+  - collectives classified and converted to per-chip wire bytes with
+    ring-algorithm factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,2048]{1,0}' → bytes; tuples summed."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_bytes_bf16(shape_str: str) -> int:
+    """bf16-native estimate: f32 counted at 2 B/elem. The CPU backend has no
+    native bf16 dot, so XLA:CPU inserts f32 conversions a real TPU lowering
+    would not; this estimate undoes that artifact (over-corrects genuine-f32
+    tensors like Adam moments — both numbers are reported)."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * (2 if dt == "f32" else _DTYPE_BYTES[dt])
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = re.search(r"\w+\[([\d,]*)\]", shape_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_bytes: int
+    result_dims: List[int]
+    opcode: str
+    operands: List[str]
+    line: str
+    result_bytes16: int = 0
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^()]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\(")
+
+
+def _parse_operands(line: str) -> List[str]:
+    # operands are inside the first (...) after the opcode
+    m = re.search(r"[\w\-]+\((.*)$", line)
+    if not m:
+        return []
+    body = m.group(1)
+    # cut at top-level close paren
+    depth, end = 1, len(body)
+    for i, ch in enumerate(body):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w\.\-]+)", body[:end])
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, Dict[str, Instr]] = {}
+        self.comp_order: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            # computation header: "%name (args) -> ret {" possibly prefixed ENTRY
+            if s.endswith("{") and "->" in s and "(" in s:
+                m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(", s)
+                if m:
+                    cur = m.group(2)
+                    self.comps[cur] = {}
+                    self.comp_order[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                    # header params: "param_0: f32[...]"
+                    for pm in re.finditer(r"([\w\.\-]+)\s*:\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))", s):
+                        inst = Instr(pm.group(1), _shape_bytes(pm.group(2)),
+                                     _shape_dims(pm.group(2)), "parameter", [], s,
+                                     _shape_bytes_bf16(pm.group(2)))
+                        self.comps[cur][pm.group(1)] = inst
+                    continue
+            if s == "}" or s.startswith("}"):
+                # stay permissive: only reset on standalone brace
+                if s == "}":
+                    cur = None
+                continue
+            if cur is None or not s or s.startswith("//"):
+                continue
+            m = _OP_RE.match(s)
+            if not m:
+                continue
+            name, shape_str, opcode = m.group(1), m.group(2), m.group(3)
+            inst = Instr(name, _shape_bytes(shape_str), _shape_dims(shape_str),
+                         opcode, _parse_operands(s), s,
+                         _shape_bytes_bf16(shape_str))
+            self.comps[cur][name] = inst
+            self.comp_order[cur].append(inst)
+        if self.entry is None and self.comps:
+            # fallback: computation containing most instructions named main-ish
+            for name in self.comps:
+                if "main" in name:
+                    self.entry = name
+                    break
+            if self.entry is None:
+                self.entry = max(self.comps, key=lambda c: len(self.comp_order[c]))
+
+    # -- helpers ------------------------------------------------------------
+
+    def operand_bytes(self, comp: str, inst: Instr) -> int:
+        table = self.comps[comp]
+        total = 0
+        for op in inst.operands:
+            if op in table:
+                total += table[op].result_bytes
+        return total
+
+    def operand_bytes16(self, comp: str, inst: Instr) -> int:
+        table = self.comps[comp]
+        total = 0
+        for op in inst.operands:
+            if op in table:
+                total += table[op].result_bytes16
+        return total
+
+    def trip_count(self, cond_comp: str) -> int:
+        best = 1
+        for inst in self.comp_order.get(cond_comp, []):
+            for m in re.finditer(r"constant\((\d+)\)", inst.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def dot_flops(self, comp: str, inst: Instr) -> float:
+        result = 1
+        for d in inst.result_dims:
+            result *= d
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+        lhs_dims: List[int] = []
+        if inst.operands:
+            lhs = self.comps[comp].get(inst.operands[0])
+            if lhs is not None:
+                lhs_dims = lhs.result_dims
+        contract = 1
+        if m and m.group(1) and lhs_dims:
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+        return 2.0 * result * contract
+
+    def conv_flops(self, comp: str, inst: Instr) -> float:
+        result = 1
+        for d in inst.result_dims:
+            result *= d
+        kernel_dims: List[int] = []
+        if len(inst.operands) >= 2:
+            k = self.comps[comp].get(inst.operands[1])
+            if k is not None:
+                kernel_dims = k.result_dims
+        kn = 1
+        for d in kernel_dims:
+            kn *= d
+        groups = 1
+        m = re.search(r"feature_group_count=(\d+)", inst.line)
+        if m:
+            groups = int(m.group(1))
+        # flops = 2 * out_elems * (kernel_elems / out_features) where kernel
+        # out_features dim ~ last; approximate via result feature dim:
+        out_feat = inst.result_dims[-1] if inst.result_dims else 1
+        per_out = kn / max(out_feat, 1)
+        return 2.0 * result * per_out / max(groups, 1) * groups  # depthwise ok
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes16: float = 0.0
+    wire_bytes: float = 0.0
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "call", "conditional", "after-all",
+                   "partition-id", "replica-id"}
+
+
+def analyze_hlo(text: str, n_devices: int) -> Totals:
+    mod = HloModule(text)
+    tot = Totals()
+    visited_stack: Tuple[str, ...] = ()
+
+    def walk(comp: str, mult: float, stack: Tuple[str, ...]):
+        if comp in stack or comp not in mod.comp_order:
+            return
+        stack = stack + (comp,)
+        for inst in mod.comp_order[comp]:
+            op = inst.opcode
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", inst.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+                trips = mod.trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    walk(mb.group(1), mult * max(trips, 1), stack)
+                continue
+            if op in ("call", "async-start"):
+                mt = re.search(r"to_apply=%?([\w\.\-]+)", inst.line)
+                if mt:
+                    walk(mt.group(1), mult, stack)
+                continue
+            if op == "conditional":
+                for mb in re.finditer(r"%([\w\.\-]+)", inst.line.split("branch_computations", 1)[-1]):
+                    walk(mb.group(1), mult, stack)
+                continue
+            if op == "fusion":
+                # HBM traffic at fusion boundary. In-place cache updates
+                # (dynamic-update-slice roots) alias their big operand on TPU:
+                # real traffic = the updated slice (smallest operand) r+w, not
+                # the whole buffer.
+                if "dynamic-update-slice" in inst.name:
+                    op_sizes = [mod.comps[comp][o].result_bytes
+                                for o in inst.operands if o in mod.comps[comp]]
+                    small = min((s for s in op_sizes if s > 0),
+                                default=inst.result_bytes)
+                    op16 = [mod.comps[comp][o].result_bytes16
+                            for o in inst.operands if o in mod.comps[comp]]
+                    small16 = min((s for s in op16 if s > 0),
+                                  default=inst.result_bytes16)
+                    tot.bytes += 2 * small * mult
+                    tot.bytes16 += 2 * small16 * mult
+                else:
+                    tot.bytes += (inst.result_bytes +
+                                  mod.operand_bytes(comp, inst)) * mult
+                    tot.bytes16 += (inst.result_bytes16 +
+                                    mod.operand_bytes16(comp, inst)) * mult
+                mt = re.search(r"calls=%?([\w\.\-]+)", inst.line)
+                if mt:
+                    _count_flops_only(mt.group(1), mult, stack)
+                continue
+            # collectives
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                size = inst.result_bytes
+                g = _group_size(inst.line, n_devices)
+                frac = (g - 1) / max(g, 1)
+                if base == "all-reduce":
+                    wire = 2 * size * frac
+                elif base == "all-gather":
+                    wire = size * frac
+                elif base == "reduce-scatter":
+                    wire = size * g * frac
+                elif base == "all-to-all":
+                    wire = size * frac
+                else:
+                    wire = size
+                tot.coll_counts[base] = tot.coll_counts.get(base, 0) + int(max(mult, 1))
+                tot.coll_bytes[base] = tot.coll_bytes.get(base, 0.0) + size * mult
+                tot.wire_bytes += wire * mult
+                tot.bytes += (inst.result_bytes + mod.operand_bytes(comp, inst)) * mult
+                tot.bytes16 += (inst.result_bytes16 +
+                                mod.operand_bytes16(comp, inst)) * mult
+                continue
+            # flops ops
+            if op == "dot":
+                tot.flops += mod.dot_flops(comp, inst) * mult
+            elif op == "convolution":
+                tot.flops += mod.conv_flops(comp, inst) * mult
+            # bytes (HBM traffic) for materializing ops
+            if op == "dynamic-update-slice":
+                op_sizes = [mod.comps[comp][o].result_bytes
+                            for o in inst.operands[1:] if o in mod.comps[comp]]
+                small = min((s for s in op_sizes if s > 0),
+                            default=inst.result_bytes)
+                op16 = [mod.comps[comp][o].result_bytes16
+                        for o in inst.operands[1:] if o in mod.comps[comp]]
+                small16 = min((s for s in op16 if s > 0),
+                              default=inst.result_bytes16)
+                tot.bytes += 2 * small * mult
+                tot.bytes16 += 2 * small16 * mult
+            elif op not in _SKIP_BYTES_OPS:
+                tot.bytes += (inst.result_bytes + mod.operand_bytes(comp, inst)) * mult
+                tot.bytes16 += (inst.result_bytes16 +
+                                mod.operand_bytes16(comp, inst)) * mult
+
+    def _count_flops_only(comp: str, mult: float, stack: Tuple[str, ...]):
+        if comp in stack or comp not in mod.comp_order:
+            return
+        stack = stack + (comp,)
+        for inst in mod.comp_order[comp]:
+            if inst.opcode == "dot":
+                tot.flops += mod.dot_flops(comp, inst) * mult
+            elif inst.opcode == "convolution":
+                tot.flops += mod.conv_flops(comp, inst) * mult
+            elif inst.opcode == "fusion":
+                mt = re.search(r"calls=%?([\w\.\-]+)", inst.line)
+                if mt:
+                    _count_flops_only(mt.group(1), mult, stack)
+
+    walk(mod.entry, 1.0, ())
+    return tot
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-chip loop-aware HLO flops (dots+convs)
+    bytes_accessed: float        # per-chip modeled HBM bytes
+    collective_bytes: float      # per-chip modeled wire bytes
+    collective_counts: Dict[str, int]
+    n_devices: int
+    xla_flops: float = 0.0       # raw cost_analysis numbers (loop bodies 1×)
+    xla_bytes: float = 0.0
+    bytes_bf16: float = 0.0      # bf16-native estimate (CPU f32 artifact undone)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def memory_bf16_s(self) -> float:
+        return self.bytes_bf16 / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collective_counts": self.collective_counts,
+            "xla_flops": self.xla_flops, "xla_bytes": self.xla_bytes,
+            "bytes_bf16": self.bytes_bf16, "memory_bf16_s": self.memory_bf16_s,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "n_devices": self.n_devices,
+        }
+
+
+def top_bytes(text: str, n_devices: int, top: int = 20):
+    """Debug: the `top` instructions by loop-aware bytes contribution."""
+    mod = HloModule(text)
+    contrib = []
+
+    def walk(comp: str, mult: float, stack):
+        if comp in stack or comp not in mod.comp_order:
+            return
+        stack = stack + (comp,)
+        for inst in mod.comp_order[comp]:
+            if inst.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", inst.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+                trips = mod.trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    walk(mb.group(1), mult * max(trips, 1), stack)
+                continue
+            if inst.opcode in _SKIP_BYTES_OPS:
+                continue
+            b = (inst.result_bytes + mod.operand_bytes(comp, inst)) * mult
+            contrib.append((b, mult, comp, inst.opcode, inst.line[:160]))
+
+    walk(mod.entry, 1.0, ())
+    contrib.sort(reverse=True)
+    return contrib[:top]
+
+
+def analyze(compiled, n_devices: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    tot = analyze_hlo(hlo, n_devices)
+    return Roofline(tot.flops, tot.bytes, tot.wire_bytes, tot.coll_counts,
+                    n_devices, xla_flops, xla_bytes, tot.bytes16)
+
+
+def model_flops(n_params: int, n_active_params: int, tokens: int,
+                kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (forward-only), N = active params."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

@@ -1,0 +1,198 @@
+"""Step functions (train / prefill / serve) + ShapeDtypeStruct input specs for
+every (arch × shape) cell. This is the glue the dry-run, trainer and server
+all share.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.optim import adamw
+from repro.parallel import specs as SP
+from repro.parallel.sharding import DEFAULT_RULES, axis_rules, resolve_spec
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+# ---------------------------------------------------------------------------
+# logical-axis rules per shape
+# ---------------------------------------------------------------------------
+
+def make_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Any]:
+    rules = dict(DEFAULT_RULES)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if shape.kind == "decode" and shape.global_batch < dp:
+        # long-context / tiny-batch decode: batch can't fill the DP axes.
+        # Reuse the data axis for sequence (cache) sharding (SP).
+        rules["batch"] = None
+        rules["seq_shard"] = "data"
+    return rules
+
+
+def _seq_sharded(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> bool:
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return shape.kind == "decode" and shape.global_batch < dp
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, axes):
+    sharding = None
+    if mesh is not None:
+        spec = SP.sanitize_spec(resolve_spec(axes, mesh=mesh), shape, mesh)
+        sharding = NamedSharding(mesh, spec)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the data batch of one step."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.embed_inputs:
+            out["embeds"] = _sds((B, S, cfg.d_model), cfg.compute_dtype, mesh,
+                                 ("batch", "seq", "embed"))
+            if cfg.family == "encdec":  # decoder tokens alongside enc frames
+                out["tokens"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"))
+            if cfg.pos == "mrope":
+                out["positions"] = _sds((3, B, S), jnp.int32, mesh,
+                                        (None, "batch", "seq"))
+        else:
+            out["tokens"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"))
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"))
+    else:  # decode: one new token
+        out["tokens"] = _sds((B, 1), jnp.int32, mesh, ("batch", None))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh] = None) -> Any:
+    cache_shape = jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))
+    seq_sh = mesh is not None and _seq_sharded(cfg, shape, mesh)
+    spec_tree = SP.cache_specs(cache_shape, mesh, seq_sharded=seq_sh)
+    if mesh is None:
+        return cache_shape
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=NamedSharding(mesh, spec)),
+        cache_shape, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def param_specs(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                seed: int = 0, kind: Optional[str] = None) -> Any:
+    shapes = jax.eval_shape(lambda: api.init(jax.random.key(seed), cfg))
+    if mesh is None:
+        return shapes
+    spec_tree = SP.sanitize_tree(
+        SP.param_specs(shapes, mesh, cfg=cfg, kind=kind), shapes, mesh)
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=NamedSharding(mesh, spec)),
+        shapes, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                mesh: Optional[Mesh] = None, *, zero1: bool = True) -> TrainState:
+    p_sds = param_specs(cfg, mesh, kind="train")
+    opt_shape = jax.eval_shape(lambda: adamw.init(
+        opt_cfg, jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_sds)))
+    if mesh is None:
+        return TrainState(p_sds, opt_shape)
+    pspecs = SP.sanitize_tree(
+        SP.param_specs(p_sds, mesh, cfg=cfg, kind="train"), p_sds, mesh)
+    ospecs = pspecs
+    if zero1:
+        ospecs = SP.zero1_specs(pspecs, p_sds, mesh, axis="data")
+
+    def to_sds(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    leaf = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    master = jax.tree.map(to_sds, opt_shape.master, ospecs, is_leaf=leaf)
+    m = jax.tree.map(to_sds, opt_shape.m, ospecs, is_leaf=leaf)
+    v = jax.tree.map(to_sds, opt_shape.v, ospecs, is_leaf=leaf)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return TrainState(p_sds, adamw.OptState(step, master, m, v))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                opt_cfg: Optional[adamw.AdamWConfig] = None) -> Tuple:
+    """All ShapeDtypeStruct inputs for the step function of `shape.kind`."""
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        return (state_specs(cfg, opt_cfg, mesh), batch_specs(cfg, shape, mesh))
+    if shape.kind == "prefill":
+        return (param_specs(cfg, mesh, kind="prefill"), batch_specs(cfg, shape, mesh))
+    index = jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=(NamedSharding(mesh, P()) if mesh else None))
+    return (param_specs(cfg, mesh, kind="decode"), cache_specs(cfg, shape, mesh),
+            batch_specs(cfg, shape, mesh), index)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.AdamWConfig] = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        def loss_fn(p):
+            return api.loss(p, cfg, batch, train=True)
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        new_params, new_opt, metrics = adamw.apply_updates(
+            opt_cfg, state.params, grads, state.opt)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return api.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch, index):
+        logits, new_cache = api.decode_step(params, cfg, batch, cache, index)
+        return logits, new_cache
+    return serve_step
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeConfig,
+                opt_cfg: Optional[adamw.AdamWConfig] = None):
+    if shape.kind == "train":
+        return make_train_step(cfg, opt_cfg)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)
+
+
+def jit_step(cfg: ModelConfig, shape: ShapeConfig,
+             opt_cfg: Optional[adamw.AdamWConfig] = None):
+    fn = step_fn_for(cfg, shape, opt_cfg)
+    if shape.kind == "train":
+        return jax.jit(fn, donate_argnums=(0,))
+    if shape.kind == "prefill":
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(1,))

@@ -1,0 +1,91 @@
+"""Unified model API over all families.
+
+    init(key, cfg)                       -> params
+    forward(params, cfg, batch, train)   -> logits
+    loss(params, cfg, batch)             -> scalar
+    init_cache(cfg, batch, max_len)      -> cache pytree
+    decode_step(params, cfg, batch, cache, index) -> (logits, cache)
+
+`batch` keys: tokens (B,S) int32 | embeds (B,S,d) | positions | labels (B,S).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import ssm as SS
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    if cfg.family == "ssm":
+        return SS.ssm_lm_init(key, cfg)
+    if cfg.family == "hybrid":
+        return HY.hybrid_init(key, cfg)
+    if cfg.family == "encdec":
+        return ED.encdec_init(key, cfg)
+    return T.lm_init(key, cfg)  # dense | moe | vlm
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            *, train: bool = False) -> jnp.ndarray:
+    kw = dict(embeds=batch.get("embeds"), positions=batch.get("positions"),
+              train=train)
+    if cfg.family == "ssm":
+        return SS.ssm_lm_forward(params, cfg, batch.get("tokens"), **kw)
+    if cfg.family == "hybrid":
+        return HY.hybrid_forward(params, cfg, batch.get("tokens"), **kw)
+    if cfg.family == "encdec":
+        return ED.encdec_forward(params, cfg, batch.get("tokens"), **kw)
+    return T.lm_forward(params, cfg, batch.get("tokens"), **kw)
+
+
+def loss(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+         *, train: bool = True) -> jnp.ndarray:
+    logits = forward(params, cfg, batch, train=train)
+    return T.softmax_xent(logits, batch["labels"])
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+            ) -> Tuple[jnp.ndarray, Params]:
+    kw = dict(embeds=batch.get("embeds"), positions=batch.get("positions"))
+    if cfg.family == "ssm":
+        return SS.ssm_prefill(params, cfg, batch.get("tokens"), **kw)
+    if cfg.family == "hybrid":
+        return HY.hybrid_prefill(params, cfg, batch.get("tokens"), **kw)
+    if cfg.family == "encdec":
+        return ED.encdec_prefill(params, cfg, batch.get("tokens"), **kw)
+    return T.lm_prefill(params, cfg, batch.get("tokens"), **kw)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    if cfg.family == "ssm":
+        return SS.ssm_init_cache(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return HY.hybrid_init_cache(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return ED.encdec_init_cache(cfg, batch, max_len)
+    return T.lm_init_cache(cfg, batch, max_len)
+
+
+def decode_step(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+                cache: Params, index) -> Tuple[jnp.ndarray, Params]:
+    kw = dict(embeds=batch.get("embeds"))
+    if cfg.family == "ssm":
+        return SS.ssm_decode_step(params, cfg, batch["tokens"], cache, index, **kw)
+    if cfg.family == "hybrid":
+        return HY.hybrid_decode_step(params, cfg, batch["tokens"], cache, index, **kw)
+    if cfg.family == "encdec":
+        return ED.encdec_decode_step(params, cfg, batch["tokens"], cache, index, **kw)
+    return T.lm_decode_step(params, cfg, batch["tokens"], cache, index, **kw)
+
+
+def param_count(params: Params) -> int:
+    import jax
+    return sum(int(x.size) for x in jax.tree.leaves(params))

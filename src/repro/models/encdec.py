@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model). LayerNorm + GELU + MHA,
+sinusoidal positions, cross-attention from decoder to encoder states.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def sincos_positions(seq: int, dim: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    inv = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim * math.log(10000.0))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (seq, dim)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg: ModelConfig) -> Params:
+    ka, kf = jax.random.split(key)
+    return {"attn_norm": T.norm_init(cfg, cfg.d_model),
+            "attn": T.attn_init(ka, cfg),
+            "ffn_norm": T.norm_init(cfg, cfg.d_model),
+            "ffn": T.ffn_init(kf, cfg)}
+
+
+def dec_block_init(key, cfg: ModelConfig) -> Params:
+    ka, kc, kf = jax.random.split(key, 3)
+    return {"self_norm": T.norm_init(cfg, cfg.d_model),
+            "self_attn": T.attn_init(ka, cfg),
+            "cross_norm": T.norm_init(cfg, cfg.d_model),
+            "cross_attn": T.attn_init(kc, cfg),
+            "ffn_norm": T.norm_init(cfg, cfg.d_model),
+            "ffn": T.ffn_init(kf, cfg)}
+
+
+def _cross_attend(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """x:(B,Sq,d) attends precomputed enc K/V (B,Skv,KV,hd)."""
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"])
+    out = T._sdpa(q, k, v, None, cfg.head_dim ** -0.5)
+    return T._out_proj(p, out)
+
+
+def _cross_kv(p: Params, cfg: ModelConfig, enc: jnp.ndarray):
+    k = jnp.einsum("...d,dhk->...hk", enc, p["wk"])
+    v = jnp.einsum("...d,dhk->...hk", enc, p["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def encdec_init(key, cfg: ModelConfig) -> Params:
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    ek = jax.random.split(kenc, cfg.n_enc_layers)
+    dk = jax.random.split(kdec, cfg.n_dec_layers)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dtype=cfg.param_dtype),
+        "enc_layers": jax.vmap(lambda k: enc_block_init(k, cfg))(ek),
+        "enc_norm": T.norm_init(cfg, cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: dec_block_init(k, cfg))(dk),
+        "dec_norm": T.norm_init(cfg, cfg.d_model),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dtype=cfg.param_dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray,
+           *, train: bool = False) -> jnp.ndarray:
+    """frames: precomputed frame embeddings (B, S_enc, d_model)."""
+    B, S, _ = frames.shape
+    x = frames.astype(cfg.compute_dtype)
+    x = x + sincos_positions(S, cfg.d_model).astype(cfg.compute_dtype)[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(xx, lp):
+        h = T.norm_apply(cfg, lp["attn_norm"], xx)
+        xx = xx + T.attention_apply(lp["attn"], cfg, h, None, causal=False)
+        h = T.norm_apply(cfg, lp["ffn_norm"], xx)
+        return xx + T.ffn_apply(lp["ffn"], cfg, h), None
+
+    body = T._remat(body, cfg) if train else body
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return T.norm_apply(cfg, params["enc_norm"], x)
+
+
+def decode_train(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 enc: jnp.ndarray, *, train: bool = False) -> jnp.ndarray:
+    """Teacher-forced decoder over full token sequence."""
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens).astype(cfg.compute_dtype)
+    x = x + sincos_positions(S, cfg.d_model).astype(cfg.compute_dtype)[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(xx, lp):
+        h = T.norm_apply(cfg, lp["self_norm"], xx)
+        xx = xx + T.attention_apply(lp["self_attn"], cfg, h, None, causal=True)
+        h = T.norm_apply(cfg, lp["cross_norm"], xx)
+        ck, cv = _cross_kv(lp["cross_attn"], cfg, enc)
+        xx = xx + _cross_attend(lp["cross_attn"], cfg, h, ck, cv)
+        h = T.norm_apply(cfg, lp["ffn_norm"], xx)
+        return xx + T.ffn_apply(lp["ffn"], cfg, h), None
+
+    body = T._remat(body, cfg) if train else body
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = T.norm_apply(cfg, params["dec_norm"], x)
+    return L.dense_apply(params["lm_head"], x)
+
+
+def encdec_forward(params: Params, cfg: ModelConfig, tokens, *, embeds=None,
+                   positions=None, train: bool = False) -> jnp.ndarray:
+    """Unified API: embeds = encoder frames (stub frontend), tokens = decoder."""
+    enc = encode(params, cfg, embeds, train=train)
+    return decode_train(params, cfg, tokens, enc, train=train)
+
+
+def encdec_prefill(params: Params, cfg: ModelConfig, tokens, *, embeds=None,
+                   positions=None) -> Tuple[jnp.ndarray, Params]:
+    """Encoder pass + teacher-forced decoder prefill → (last logits, caches)."""
+    enc = encode(params, cfg, embeds)
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens).astype(cfg.compute_dtype)
+    x = x + sincos_positions(S, cfg.d_model).astype(cfg.compute_dtype)[None]
+
+    def body(xx, lp):
+        h = T.norm_apply(cfg, lp["self_norm"], xx)
+        a, (k, v) = T.attention_apply(lp["self_attn"], cfg, h, None,
+                                      causal=True, return_kv=True)
+        xx = xx + a
+        h = T.norm_apply(cfg, lp["cross_norm"], xx)
+        ck, cv = _cross_kv(lp["cross_attn"], cfg, enc)
+        xx = xx + _cross_attend(lp["cross_attn"], cfg, h, ck, cv)
+        h = T.norm_apply(cfg, lp["ffn_norm"], xx)
+        xx = xx + T.ffn_apply(lp["ffn"], cfg, h)
+        return xx, (k.astype(cfg.param_dtype), v.astype(cfg.param_dtype),
+                    ck.astype(cfg.param_dtype), cv.astype(cfg.param_dtype))
+
+    x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+    x = T.norm_apply(cfg, params["dec_norm"], x[:, -1:])
+    logits = L.dense_apply(params["lm_head"], x)
+    return logits, {"k": k, "v": v, "ck": ck, "cv": cv}
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    hd, KV = cfg.head_dim, cfg.n_kv_heads
+    LD = cfg.n_dec_layers
+    return {
+        "k": jnp.zeros((LD, batch, max_len, KV, hd), cfg.param_dtype),
+        "v": jnp.zeros((LD, batch, max_len, KV, hd), cfg.param_dtype),
+        # cross K/V filled by prefill from encoder states (enc len == max_len here)
+        "ck": jnp.zeros((LD, batch, max_len, KV, hd), cfg.param_dtype),
+        "cv": jnp.zeros((LD, batch, max_len, KV, hd), cfg.param_dtype),
+    }
+
+
+def encdec_prefill_cross(params: Params, cfg: ModelConfig, enc: jnp.ndarray,
+                         cache: Params) -> Params:
+    """Populate per-decoder-layer cross K/V from encoder output."""
+    def body(_, lp):
+        ck, cv = _cross_kv(lp["cross_attn"], cfg, enc)
+        return None, (ck.astype(cfg.param_dtype), cv.astype(cfg.param_dtype))
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec_layers"])
+    return {**cache, "ck": ck, "cv": cv}
+
+
+def encdec_decode_step(params: Params, cfg: ModelConfig, tokens, cache, index,
+                       *, embeds=None) -> Tuple[jnp.ndarray, Params]:
+    """One decoder token vs self KV cache + cached cross K/V."""
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens).astype(cfg.compute_dtype)
+    x = x + sincos_positions(1, cfg.d_model, offset=index).astype(cfg.compute_dtype)[None]
+
+    def body(xx, scanned):
+        lp, kc, vc, ck, cv = scanned
+        h = T.norm_apply(cfg, lp["self_norm"], xx)
+        a, kc, vc = T.attention_decode(lp["self_attn"], cfg, h, None, kc, vc, index)
+        xx = xx + a
+        h = T.norm_apply(cfg, lp["cross_norm"], xx)
+        xx = xx + _cross_attend(lp["cross_attn"], cfg, h, ck, cv)
+        h = T.norm_apply(cfg, lp["ffn_norm"], xx)
+        return xx + T.ffn_apply(lp["ffn"], cfg, h), (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    x = T.norm_apply(cfg, params["dec_norm"], x)
+    logits = L.dense_apply(params["lm_head"], x)
+    return logits, {**cache, "k": k_new, "v": v_new}

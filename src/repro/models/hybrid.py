@@ -1,0 +1,180 @@
+"""Jamba-style hybrid: attn:mamba 1:7 interleave, MoE every `moe_period`
+layers (arXiv:2403.19887). The repeating period (attn_period layers) is the
+scan unit — sub-layers inside a period are heterogeneous (unrolled), periods
+are homogeneous (scanned), keeping compile time O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _layer_kinds(cfg: ModelConfig):
+    """(is_attn, is_moe) for each sub-layer in one period."""
+    kinds = []
+    for i in range(cfg.attn_period):
+        is_attn = (i % cfg.attn_period == cfg.attn_period // 2)  # attn mid-period
+        is_moe = (cfg.n_experts > 0 and cfg.moe_period > 0
+                  and i % cfg.moe_period == 1)
+        kinds.append((is_attn, is_moe))
+    return kinds
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_period == 0, (cfg.n_layers, cfg.attn_period)
+    return cfg.n_layers // cfg.attn_period
+
+
+def _sub_init(key, cfg: ModelConfig, is_attn: bool, is_moe: bool) -> Params:
+    km, kf = jax.random.split(key)
+    p = {"mixer_norm": T.norm_init(cfg, cfg.d_model),
+         "ffn_norm": T.norm_init(cfg, cfg.d_model)}
+    p["mixer"] = T.attn_init(km, cfg) if is_attn else S.mamba_init(km, cfg)
+    p["ffn"] = T.moe_init(kf, cfg) if is_moe else T.ffn_init(kf, cfg)
+    return p
+
+
+def period_init(key, cfg: ModelConfig) -> Params:
+    kinds = _layer_kinds(cfg)
+    keys = jax.random.split(key, len(kinds))
+    return {f"sub{i}": _sub_init(keys[i], cfg, a, m)
+            for i, (a, m) in enumerate(kinds)}
+
+
+def hybrid_init(key, cfg: ModelConfig) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    pkeys = jax.random.split(kl, n_periods(cfg))
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dtype=cfg.param_dtype),
+        "periods": jax.vmap(lambda k: period_init(k, cfg))(pkeys),
+        "out_norm": T.norm_init(cfg, cfg.d_model),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dtype=cfg.param_dtype),
+    }
+
+
+def _period_apply(pp: Params, cfg: ModelConfig, x: jnp.ndarray, positions) -> jnp.ndarray:
+    for i, (is_attn, is_moe) in enumerate(_layer_kinds(cfg)):
+        sp = pp[f"sub{i}"]
+        h = T.norm_apply(cfg, sp["mixer_norm"], x)
+        if is_attn:
+            x = x + T.attention_apply(sp["attn"] if "attn" in sp else sp["mixer"],
+                                      cfg, h, positions, causal=True)
+        else:
+            x = x + S.mamba_apply(sp["mixer"], cfg, h)
+        h = T.norm_apply(cfg, sp["ffn_norm"], x)
+        if is_moe:
+            x = x + T.moe_apply(sp["ffn"], cfg, h)
+        else:
+            x = x + T.ffn_apply(sp["ffn"], cfg, h)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def hybrid_forward(params: Params, cfg: ModelConfig, tokens, *, embeds=None,
+                   positions=None, train: bool = False) -> jnp.ndarray:
+    x = (L.embed_apply(params["embed"], tokens) if embeds is None else embeds)
+    x = x.astype(cfg.compute_dtype)
+    B, Sq = x.shape[:2]
+    if positions is None:
+        positions = T.default_positions(cfg, B, Sq)
+
+    body = lambda xx, pp: (_period_apply(pp, cfg, xx, positions), None)
+    body = T._remat(body, cfg) if train else body
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    x = T.norm_apply(cfg, params["out_norm"], x)
+    return L.dense_apply(params["lm_head"], x)
+
+
+def hybrid_prefill(params: Params, cfg: ModelConfig, tokens, *, embeds=None,
+                   positions=None) -> Tuple[jnp.ndarray, Params]:
+    """Prefill → (last-token logits, {k,v,conv,state} cache)."""
+    x = (L.embed_apply(params["embed"], tokens) if embeds is None else embeds)
+    x = x.astype(cfg.compute_dtype)
+    B, Sq = x.shape[:2]
+    positions = T.default_positions(cfg, B, Sq) if positions is None else positions
+
+    def body(xx, pp):
+        kv = None
+        convs, states = [], []
+        for i, (is_attn, is_moe) in enumerate(_layer_kinds(cfg)):
+            sp = pp[f"sub{i}"]
+            h = T.norm_apply(cfg, sp["mixer_norm"], xx)
+            if is_attn:
+                a, kv = T.attention_apply(sp["mixer"], cfg, h, positions,
+                                          causal=True, return_kv=True)
+                xx = xx + a
+            else:
+                y, h_fin, conv_tail = S.mamba_apply(sp["mixer"], cfg, h,
+                                                    return_state=True)
+                convs.append(conv_tail.astype(cfg.param_dtype))
+                states.append(h_fin)
+                xx = xx + y
+            h = T.norm_apply(cfg, sp["ffn_norm"], xx)
+            xx = xx + (T.moe_apply(sp["ffn"], cfg, h) if is_moe
+                       else T.ffn_apply(sp["ffn"], cfg, h))
+        k, v = kv
+        return xx, (k.astype(cfg.param_dtype), v.astype(cfg.param_dtype),
+                    jnp.stack(convs), jnp.stack(states))
+
+    x, (k, v, conv, state) = jax.lax.scan(body, x, params["periods"])
+    x = T.norm_apply(cfg, params["out_norm"], x[:, -1:])
+    logits = L.dense_apply(params["lm_head"], x)
+    return logits, {"k": k, "v": v, "conv": conv, "state": state}
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    NP = n_periods(cfg)
+    d_in, H, P, N, conv_ch = S._dims(cfg)
+    n_mamba = sum(1 for a, _ in _layer_kinds(cfg) if not a)
+    return {
+        "k": jnp.zeros((NP, batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.param_dtype),
+        "v": jnp.zeros((NP, batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.param_dtype),
+        "conv": jnp.zeros((NP, n_mamba, batch, cfg.ssm_conv - 1, conv_ch), cfg.param_dtype),
+        "state": jnp.zeros((NP, n_mamba, batch, H, P, N), jnp.float32),
+    }
+
+
+def hybrid_decode_step(params: Params, cfg: ModelConfig, tokens, cache, index,
+                       *, embeds=None) -> Tuple[jnp.ndarray, Params]:
+    x = (L.embed_apply(params["embed"], tokens) if embeds is None else embeds)
+    x = x.astype(cfg.compute_dtype)
+    B = x.shape[0]
+    pos = T.default_positions(cfg, B, 1, offset=index)
+
+    def body(xx, scanned):
+        pp, kc, vc, conv_s, ssm_s = scanned
+        mi = 0
+        new_conv, new_state = [], []
+        for i, (is_attn, is_moe) in enumerate(_layer_kinds(cfg)):
+            sp = pp[f"sub{i}"]
+            h = T.norm_apply(cfg, sp["mixer_norm"], xx)
+            if is_attn:
+                a, kc, vc = T.attention_decode(sp["mixer"], cfg, h, pos, kc, vc, index)
+                xx = xx + a
+            else:
+                y, cs, hs = S.mamba_decode(sp["mixer"], cfg, h,
+                                           conv_s[mi], ssm_s[mi])
+                new_conv.append(cs)
+                new_state.append(hs)
+                mi += 1
+                xx = xx + y
+            h = T.norm_apply(cfg, sp["ffn_norm"], xx)
+            xx = xx + (T.moe_apply(sp["ffn"], cfg, h) if is_moe
+                       else T.ffn_apply(sp["ffn"], cfg, h))
+        return xx, (kc, vc, jnp.stack(new_conv), jnp.stack(new_state))
+
+    x, (k_new, v_new, conv_new, state_new) = jax.lax.scan(
+        body, x, (params["periods"], cache["k"], cache["v"],
+                  cache["conv"], cache["state"]))
+    x = T.norm_apply(cfg, params["out_norm"], x)
+    logits = L.dense_apply(params["lm_head"], x)
+    return logits, {"k": k_new, "v": v_new, "conv": conv_new, "state": state_new}

@@ -1,0 +1,185 @@
+"""Pure-functional neural net layers (no flax dependency).
+
+Every layer is a pair of functions:
+  ``init(key, ...) -> params`` (a pytree of jnp arrays)
+  ``apply(params, x, ...) -> y``
+
+Parameter pytrees are plain dicts so they shard naturally under pjit with
+PartitionSpec trees produced by ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _trunc_normal(key, shape, std, dtype):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, dtype=jnp.float32,
+               use_bias: bool = False, std: Optional[float] = None) -> Params:
+    std = std if std is not None else 1.0 / math.sqrt(in_dim)
+    p = {"kernel": _trunc_normal(key, (in_dim, out_dim), std, dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("...i,io->...o", x, p["kernel"])
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def embed_init(key, vocab: int, dim: int, *, dtype=jnp.float32) -> Params:
+    return {"embedding": _trunc_normal(key, (vocab, dim), 0.02, dtype)}
+
+
+def embed_apply(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["embedding"], ids, axis=0)
+
+
+def embed_attend(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied-weight logits: (..., d) @ (vocab, d)^T."""
+    return jnp.einsum("...d,vd->...v", x, p["embedding"])
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(dim: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, *, theta: float = 10000.0) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta=theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions_3d: jnp.ndarray, *, sections=(16, 24, 24),
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: three position streams (temporal, h, w) rotate disjoint
+    frequency sections. x: (..., seq, heads, head_dim); positions_3d: (3, ..., seq).
+
+    ``sections`` are sizes in frequency (pair) space and must sum to head_dim//2.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(head_dim, theta=theta)  # (half,)
+    # build per-frequency position by section
+    sec_idx = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                         total_repeat_length=half)  # (half,)
+    pos = positions_3d.astype(jnp.float32)  # (3, ..., seq)
+    pos_per_freq = jnp.take(pos, sec_idx, axis=0)  # (half, ..., seq) via axis0 gather
+    pos_per_freq = jnp.moveaxis(pos_per_freq, 0, -1)  # (..., seq, half)
+    angles = pos_per_freq * freqs  # (..., seq, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv (for the paper's WRN/MobileNet reproduction)
+# ---------------------------------------------------------------------------
+
+def conv2d_init(key, in_ch: int, out_ch: int, ksize: int, *, dtype=jnp.float32,
+                groups: int = 1) -> Params:
+    fan_in = in_ch // groups * ksize * ksize
+    std = math.sqrt(2.0 / fan_in)
+    return {"kernel": _trunc_normal(key, (ksize, ksize, in_ch // groups, out_ch), std, dtype)}
+
+
+def conv2d_apply(p: Params, x: jnp.ndarray, *, stride: int = 1,
+                 padding: str = "SAME", groups: int = 1) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x, p["kernel"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+
+
+def batchnorm_init(ch: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((ch,), dtype), "bias": jnp.zeros((ch,), dtype),
+            "mean": jnp.zeros((ch,), jnp.float32), "var": jnp.ones((ch,), jnp.float32)}
+
+
+def batchnorm_apply(p: Params, x: jnp.ndarray, *, train: bool = False,
+                    momentum: float = 0.9, eps: float = 1e-5
+                    ) -> Tuple[jnp.ndarray, Params]:
+    """Returns (y, updated_stats). In eval mode stats pass through unchanged."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x.astype(jnp.float32), axis=axes)
+        var = jnp.var(x.astype(jnp.float32), axis=axes)
+        new_stats = {**p,
+                     "mean": momentum * p["mean"] + (1 - momentum) * mean,
+                     "var": momentum * p["var"] + (1 - momentum) * var}
+    else:
+        mean, var = p["mean"], p["var"]
+        new_stats = p
+    y = (x.astype(jnp.float32) - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_stats
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)

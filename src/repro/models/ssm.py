@@ -1,0 +1,259 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the chunked dual form (quadratic *within* a chunk,
+linear across chunks); decode carries a constant-size recurrent state, which
+is what makes `long_500k` feasible (O(1) memory traffic per token).
+
+A Pallas kernel for the chunked scan lives in repro.kernels.ssd_scan; this
+module is the reference implementation the kernel is validated against, and
+is what gets lowered in the dry-run (the kernel is TPU-targeted).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+_G = 1  # n_groups for B/C projections
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    H = cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * _G * N
+    return d_in, H, P, N, conv_ch
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_proj = 2 * d_in + 2 * _G * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(k1, cfg.d_model, d_proj, dtype=cfg.param_dtype),
+        "conv_w": L._trunc_normal(k2, (cfg.ssm_conv, conv_ch), 0.5, cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.param_dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": L.rmsnorm_init(d_in, dtype=cfg.param_dtype),
+        "out_proj": L.dense_init(k3, d_in, cfg.d_model, dtype=cfg.param_dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_in, H, P, N, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * _G * N], axis=-1)
+    return z, xbc, dt  # (..., d_in), (..., conv_ch), (..., H)
+
+
+def _causal_conv(p: Params, xbc: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B,Len,CH)."""
+    k = p["conv_w"].shape[0]
+    x = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    kernel = p["conv_w"][:, None, :]  # (k, 1, CH) HWIO with I=1, depthwise
+    y = jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu(y + p["conv_b"])
+
+
+def _gated_norm(p: Params, y: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    return L.rmsnorm_apply(p["out_norm"], y * jax.nn.silu(z))
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                h0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    xh: (B,Len,H,P)  dt: (B,Len,H)  A: (H,) (negative)
+    Bm, Cm: (B,Len,N) (single group, broadcast over heads)
+    Returns (y (B,Len,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, Ln, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, Ln)
+    assert Ln % Q == 0, (Ln, Q)
+    NC = Ln // Q
+    f32 = jnp.float32
+
+    xb = (xh.astype(f32) * dt.astype(f32)[..., None])          # dt folded into x
+    la = dt.astype(f32) * A                                     # log-decay (B,L,H) <= 0
+    rs = lambda t, tail: t.reshape(Bsz, NC, Q, *tail)
+    xb, la = rs(xb, (H, P)), rs(la, (H,))
+    Bc, Cc = rs(Bm.astype(f32), (N,)), rs(Cm.astype(f32), (N,))
+    xc = rs(xh.astype(f32), (H, P))
+
+    # move chunk axis to front for scan
+    xb, la, Bc, Cc, xc = (jnp.moveaxis(t, 1, 0) for t in (xb, la, Bc, Cc, xc))
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    h_init = (jnp.zeros((Bsz, H, P, N), f32) if h0 is None else h0.astype(f32))
+
+    def chunk_body(h, args):
+        xb_c, la_c, B_c, C_c = args                      # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        cum = jnp.cumsum(la_c, axis=1)                   # (B,Q,H)
+        # intra-chunk (dual quadratic form)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,Q,Q,H) t,s
+        decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+        scores = jnp.einsum("bqn,bsn->bqs", C_c, B_c)[..., None] * decay  # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", scores, xb_c)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", C_c, h) * jnp.exp(cum)[..., None]
+        # state update
+        last = cum[:, -1, :]                             # (B,H)
+        sdecay = jnp.exp(last[:, None, :] - cum)         # (B,Q,H)
+        h_new = h * jnp.exp(last)[..., None, None] + jnp.einsum(
+            "bsn,bshp->bhpn", B_c, xb_c * sdecay[..., None])
+        return h_new, y_intra + y_inter
+
+    h_fin, y = jax.lax.scan(chunk_body, h_init, (xb, la, Bc, Cc))
+    y = jnp.moveaxis(y, 0, 1).reshape(Bsz, Ln, H, P)
+    return y, h_fin
+
+
+def mamba_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None,
+                conv0: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """Full-sequence mamba2 mixer. x: (B,Len,d_model). With return_state,
+    also returns (final_ssm_state, conv_tail) for decode continuation."""
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    proj = L.dense_apply(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, proj)
+    conv_tail = xbc[:, -(cfg.ssm_conv - 1):, :] if return_state else None
+    xbc = _causal_conv(p, xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + _G * N], axis=-1)
+    xh = xs.reshape(*xs.shape[:-1], H, P)
+    xh = constrain(xh, ("batch", "seq", "ssm_inner", None))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_fin = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, h0)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(*x.shape[:-1], d_in).astype(cfg.compute_dtype)
+    y = _gated_norm(p, y, z)
+    out = L.dense_apply(p["out_proj"], y)
+    if return_state:
+        return out, h_fin, conv_tail
+    return out
+
+
+def mamba_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 conv_state: jnp.ndarray, ssm_state: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x:(B,1,d); conv_state:(B,k-1,conv_ch);
+    ssm_state:(B,H,P,N)."""
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    proj = L.dense_apply(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, proj)                  # (B,1,·)
+    # conv via state
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # (B,k,CH)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv = window[:, 1:]
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + _G * N], axis=-1)
+    xh = xs.reshape(-1, H, P)                            # (B,H,P)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dtv * A)                                 # (B,H)
+    xb = xh.astype(jnp.float32) * dtv[..., None]
+    upd = jnp.einsum("bn,bhp->bhpn", Bm.astype(jnp.float32), xb)
+    h_new = ssm_state * a[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h_new)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(-1, 1, d_in).astype(cfg.compute_dtype)
+    y = _gated_norm(p, y, z)
+    return L.dense_apply(p["out_proj"], y), new_conv, h_new
+
+
+# ---------------------------------------------------------------------------
+# full SSM LM
+# ---------------------------------------------------------------------------
+
+def ssm_block_init(key, cfg: ModelConfig) -> Params:
+    return {"norm": T.norm_init(cfg, cfg.d_model), "mixer": mamba_init(key, cfg)}
+
+
+def ssm_lm_init(key, cfg: ModelConfig) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dtype=cfg.param_dtype),
+        "layers": jax.vmap(lambda k: ssm_block_init(k, cfg))(lkeys),
+        "out_norm": T.norm_init(cfg, cfg.d_model),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, dtype=cfg.param_dtype),
+    }
+
+
+def ssm_lm_forward(params: Params, cfg: ModelConfig, tokens, *,
+                   embeds=None, positions=None, train: bool = False) -> jnp.ndarray:
+    x = (L.embed_apply(params["embed"], tokens) if embeds is None else embeds)
+    x = x.astype(cfg.compute_dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(xx, lp):
+        h = T.norm_apply(cfg, lp["norm"], xx)
+        return xx + mamba_apply(lp["mixer"], cfg, h), None
+
+    body = T._remat(body, cfg) if train else body
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = T.norm_apply(cfg, params["out_norm"], x)
+    return L.dense_apply(params["lm_head"], x)
+
+
+def ssm_prefill(params: Params, cfg: ModelConfig, tokens, *, embeds=None,
+                positions=None) -> Tuple[jnp.ndarray, Params]:
+    """Prefill → (last-token logits, {conv, state} cache)."""
+    x = (L.embed_apply(params["embed"], tokens) if embeds is None else embeds)
+    x = x.astype(cfg.compute_dtype)
+
+    def body(xx, lp):
+        h = T.norm_apply(cfg, lp["norm"], xx)
+        y, h_fin, conv_tail = mamba_apply(lp["mixer"], cfg, h, return_state=True)
+        return xx + y, (conv_tail.astype(cfg.param_dtype), h_fin)
+
+    x, (conv, state) = jax.lax.scan(body, x, params["layers"])
+    x = T.norm_apply(cfg, params["out_norm"], x[:, -1:])
+    logits = L.dense_apply(params["lm_head"], x)
+    return logits, {"conv": conv, "state": state}
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    k = cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, k - 1, conv_ch), cfg.param_dtype),
+        "state": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+    }
+
+
+def ssm_decode_step(params: Params, cfg: ModelConfig, tokens, cache, index,
+                    *, embeds=None) -> Tuple[jnp.ndarray, Params]:
+    x = (L.embed_apply(params["embed"], tokens) if embeds is None else embeds)
+    x = x.astype(cfg.compute_dtype)
+
+    def body(xx, scanned):
+        lp, conv_s, ssm_s = scanned
+        h = T.norm_apply(cfg, lp["norm"], xx)
+        y, conv_s, ssm_s = mamba_decode(lp["mixer"], cfg, h, conv_s, ssm_s)
+        return xx + y, (conv_s, ssm_s)
+
+    x, (conv_new, state_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]))
+    x = T.norm_apply(cfg, params["out_norm"], x)
+    logits = L.dense_apply(params["lm_head"], x)
+    return logits, {"conv": conv_new, "state": state_new}

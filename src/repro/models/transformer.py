@@ -1,0 +1,590 @@
+"""Decoder-only LM substrate: GQA attention (RoPE / M-RoPE), SwiGLU FFN,
+token-dropping MoE with sort-free scatter dispatch, scan-over-layers.
+
+Covers families: dense, moe, vlm (embed inputs + M-RoPE). Hybrid and enc-dec
+models reuse the attention/FFN pieces from here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# norms (family-selected)
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, dim: int) -> Params:
+    if cfg.norm == "layernorm":
+        return L.layernorm_init(dim, dtype=cfg.param_dtype)
+    return L.rmsnorm_init(dim, dtype=cfg.param_dtype)
+
+
+def norm_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        return L.layernorm_apply(p, x)
+    return L.rmsnorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    """Head-structured params: wq (d,Hp,hd), wk/wv (d,KV,hd), wo (Hp,hd,d).
+    Hp = heads padded up for even TP; padded wo slices are zeroed (inert)."""
+    hd, Hp, KV = cfg.head_dim, cfg.heads_padded, cfg.n_kv_heads
+    d = cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    std = 1.0 / (d ** 0.5)
+    wo = L._trunc_normal(ko, (Hp, hd, d), 1.0 / ((cfg.n_heads * hd) ** 0.5),
+                         cfg.param_dtype)
+    if Hp > cfg.n_heads:
+        mask = (jnp.arange(Hp) < cfg.n_heads)[:, None, None]
+        wo = wo * mask.astype(wo.dtype)
+    return {
+        "wq": L._trunc_normal(kq, (d, Hp, hd), std, cfg.param_dtype),
+        "wk": L._trunc_normal(kk, (d, KV, hd), std, cfg.param_dtype),
+        "wv": L._trunc_normal(kv, (d, KV, hd), std, cfg.param_dtype),
+        "wo": wo,
+    }
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, xq: jnp.ndarray,
+                 xkv: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("...d,dhk->...hk", xq, p["wq"])
+    k = jnp.einsum("...d,dhk->...hk", xkv, p["wk"])
+    v = jnp.einsum("...d,dhk->...hk", xkv, p["wv"])
+    return q, k, v
+
+
+def _out_proj(p: Params, out: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...hk,hkd->...d", out, p["wo"])
+
+
+def _apply_positions(cfg: ModelConfig, q, k, positions):
+    """positions: (B,S) for rope; (3,B,S) for mrope; None for pos='none'/'sincos'."""
+    if cfg.pos == "rope":
+        q = L.apply_rope(q, positions, theta=cfg.rope_theta)
+        k = L.apply_rope(k, positions, theta=cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = L.apply_mrope(q, positions, sections=cfg.mrope_sections, theta=cfg.rope_theta)
+        k = L.apply_mrope(k, positions, sections=cfg.mrope_sections, theta=cfg.rope_theta)
+    return q, k
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q:(B,Sq,H,hd) k/v:(B,Skv,KV,hd); GQA by head grouping. mask broadcast to
+    (B,1,1,Sq,Skv) or None. Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _causal_mask(sq: int, skv: int, q_offset) -> jnp.ndarray:
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(skv)[None, :]
+    return (ki <= qi)[None, None, None]  # (1,1,1,Sq,Skv)
+
+
+def full_attention(cfg: ModelConfig, q, k, v, *, causal: bool) -> jnp.ndarray:
+    scale = cfg.head_dim ** -0.5
+    mask = _causal_mask(q.shape[1], k.shape[1], 0) if causal else None
+    return _sdpa(q, k, v, mask, scale)
+
+
+def blocked_attention(cfg: ModelConfig, q, k, v, *, causal: bool) -> jnp.ndarray:
+    """Exact attention, scanned over query blocks: O(block_q * Skv) live memory
+    instead of O(Sq * Skv). Used automatically for long sequences."""
+    B, Sq, H, hd = q.shape
+    bq = min(cfg.attn_block_q, Sq)
+    if Sq % bq != 0:
+        return full_attention(cfg, q, k, v, causal=causal)
+    scale = hd ** -0.5
+    nblk = Sq // bq
+    qb = q.reshape(B, nblk, bq, H, hd).transpose(1, 0, 2, 3, 4)  # (nblk,B,bq,H,hd)
+
+    def body(carry, args):
+        i, qi = args
+        mask = _causal_mask(bq, k.shape[1], i * bq) if causal else None
+        return carry, _sdpa(qi, k, v, mask, scale)
+
+    _, out = jax.lax.scan(body, (), (jnp.arange(nblk), qb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def attention_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
+                    *, causal: bool = True, return_kv: bool = False):
+    """Full-sequence (train/prefill) self-attention."""
+    q, k, v = _project_qkv(p, cfg, x, x)
+    q, k = _apply_positions(cfg, q, k, positions)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "blocked" if x.shape[1] > 2048 else "full"
+    if impl == "blocked":
+        out = blocked_attention(cfg, q, k, v, causal=causal)
+    else:
+        out = full_attention(cfg, q, k, v, causal=causal)
+    out = constrain(out, ("batch", "seq", "heads", None))
+    out = _out_proj(p, out)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     index: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x:(B,1,d); k_cache/v_cache:(B,Smax,KV,hd); index: scalar
+    position of the new token. Returns (out, new_k_cache, new_v_cache)."""
+    B, _, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, x)
+    q, k = _apply_positions(cfg, q, k, positions)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, index, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, index, 0, 0))
+    scale = cfg.head_dim ** -0.5
+    Smax = k_cache.shape[1]
+    mask = (jnp.arange(Smax)[None, None, None, None, :] <= index)
+    out = _sdpa(q, k_cache, v_cache, mask, scale)
+    return _out_proj(p, out), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense SwiGLU / GELU
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    if cfg.act == "swiglu":
+        return {"wi": L.dense_init(k1, cfg.d_model, 2 * d_ff, dtype=cfg.param_dtype),
+                "wo": L.dense_init(k2, d_ff, cfg.d_model, dtype=cfg.param_dtype)}
+    return {"wi": L.dense_init(k1, cfg.d_model, d_ff, dtype=cfg.param_dtype, use_bias=True),
+            "wo": L.dense_init(k2, d_ff, cfg.d_model, dtype=cfg.param_dtype, use_bias=True)}
+
+
+def ffn_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    h = L.dense_apply(p["wi"], x)
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = L.swiglu(gate, up)
+    else:
+        h = L.gelu(h)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return L.dense_apply(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — sort-free scatter dispatch (token-dropping, GShard-style capacity)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    kr, k1, k2 = jax.random.split(key, 3)
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    std = 1.0 / (d ** 0.5)
+
+    def expert_stack(k, shape):
+        return L._trunc_normal(k, shape, std, cfg.param_dtype)
+
+    return {
+        "router": L.dense_init(kr, d, E, dtype=jnp.float32),
+        # wi[e,0] = gate proj, wi[e,1] = up proj — the explicit gate/up axis
+        # keeps the ff dim shardable (splitting a fused 2ff dim would tear the
+        # gate/up halves apart on ff-sharded layouts).
+        "wi": expert_stack(k1, (E, 2, d, ff)),
+        "wo": expert_stack(k2, (E, ff, d)),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
+    cap = int(cfg.capacity_factor * cfg.top_k * tokens_per_row / cfg.n_experts) + 1
+    return max(cfg.top_k, -(-cap // 8) * 8)  # round up to multiple of 8
+
+
+def _moe_route(router_kernel: jnp.ndarray, cfg: ModelConfig, x: jnp.ndarray):
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, S)
+    gates = x.astype(jnp.float32) @ router_kernel              # (B,S,E)
+    probs = jax.nn.softmax(gates, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                     # (B,S,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    flat_e = top_e.reshape(B, S * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (B,SK,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C
+    return top_w, flat_e, pos, keep, C
+
+
+def _gather_dispatch(x: jnp.ndarray, dest: jnp.ndarray, n_slots: int,
+                     K: int) -> jnp.ndarray:
+    """Gather-based dispatch: scatter only int32 slot→token indices, then
+    gather token rows directly from x — avoids materializing repeat(x, K)
+    ((B, S·K, d) floats; §Perf iteration 2). Unrouted slots read a zeros row.
+
+    x: (B,S,d); dest (B,S·K) flat slot ids (n_slots = dustbin). Returns
+    (B, n_slots, d) expert input buffer."""
+    B, S, d = x.shape
+    src = jnp.full((B, n_slots + 1), S, jnp.int32)             # S → zeros row
+    tok_idx = jnp.broadcast_to(
+        (jnp.arange(S * K, dtype=jnp.int32) // K)[None], dest.shape)
+    bidx = jnp.arange(B)[:, None]
+    src = src.at[bidx, dest].set(tok_idx, mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    return jnp.take_along_axis(x_pad, src[:, :n_slots, None], axis=1)
+
+
+def _expert_compute(buf: jnp.ndarray, wi: jnp.ndarray, wo: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """buf (B,E,C,d) × wi (E,2,d,ff) × wo (E,ff,d) → (B,E,C,d)."""
+    gate = jnp.einsum("becd,edf->becf", buf, wi[:, 0])
+    up = jnp.einsum("becd,edf->becf", buf, wi[:, 1])
+    h = L.swiglu(gate, up)
+    return jnp.einsum("becf,efd->becd", h, wo)
+
+
+def _moe_apply_dense(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Single-device / GSPMD path. Dispatch is per-batch-row so token
+    positions stay local to the data shard. Token-dropping with capacity
+    C = ceil(cf·k·S/E); dropped tokens pass through (residual only)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    top_w, flat_e, pos, keep, C = _moe_route(p["router"]["kernel"], cfg, x)
+    dest = jnp.where(keep, flat_e * C + pos, E * C)            # dustbin = E*C
+
+    buf = _gather_dispatch(x, dest, E * C, K).reshape(B, E, C, d)
+    buf = constrain(buf, ("batch", "expert", "expert_cap", "embed"))
+
+    out = _expert_compute(buf, p["wi"], p["wo"])               # (B,E,C,d)
+    out = constrain(out, ("batch", "expert", "expert_cap", "embed"))
+
+    out_flat = out.reshape(B, E * C, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((B, 1, d), out.dtype)], axis=1)
+    slot_out = jnp.take_along_axis(out_flat, dest[..., None], axis=1)
+    slot_out = slot_out.reshape(B, S, K, d)
+    return jnp.einsum("bskd,bsk->bsd", slot_out, top_w.astype(x.dtype))
+
+
+def _moe_apply_shard_map(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                         mesh) -> jnp.ndarray:
+    """Manually-sharded MoE: one psum per layer instead of GSPMD's scatter/
+    gather storm (the beyond-paper optimization recorded in EXPERIMENTS.md
+    §Perf).
+
+    Expert-parallel path (E % model == 0): every model shard holds E/m
+    experts and ALL local tokens; it dispatches+computes only slots routed to
+    its experts and psums the partial combine.
+    FF-sharded path (E % model != 0, e.g. grok's 8 experts on a 16-wide
+    axis): every shard holds all experts at ff/m width (2-D-sharded with
+    `data` for memory: FSDP all-gather over `data` inside the kernel), one
+    psum over `model` after the down-projection.
+    """
+    from repro.parallel.sharding import resolve_spec
+    from jax.sharding import PartitionSpec as P
+
+    E, K = cfg.n_experts, cfg.top_k
+    m = mesh.shape["model"]
+    ep = E % m == 0
+    batch_axes = resolve_spec(("batch",), mesh=mesh)
+    batch_ax = batch_axes[0] if len(batch_axes) else None
+    data_in_mesh = "data" in mesh.axis_names
+
+    x_spec = P(batch_ax, None, None)
+    router_spec = P(None, None)
+    if ep:
+        wi_spec = P("model", None, None, None)
+        wo_spec = P("model", None, None)
+    else:
+        d_ok = data_in_mesh and cfg.d_model % mesh.shape["data"] == 0
+        wi_spec = P(None, None, "data" if d_ok else None, "model")
+        wo_spec = P(None, "model", "data" if d_ok else None)
+
+    def _combine(out, dest, top_w, B, S, n_slots, dtype):
+        out_flat = out.reshape(B, n_slots, -1)
+        out_flat = jnp.concatenate(
+            [out_flat, jnp.zeros((B, 1, out_flat.shape[-1]), out.dtype)], axis=1)
+        slot_out = jnp.take_along_axis(out_flat, dest[..., None], axis=1)
+        slot_out = slot_out.reshape(B, S, K, -1)
+        return jnp.einsum("bskd,bsk->bsd", slot_out, top_w.astype(dtype))
+
+    def kernel(router, wi, wo, xl):
+        B, S, d = xl.shape
+        fsdp = (not ep) and wi.shape[2] != cfg.d_model
+        if fsdp and S == 1 and data_in_mesh:
+            # 2-D-sharded decode path: one token/seq — gather the (tiny)
+            # tokens across `data` and keep the (huge) expert weights
+            # resident; two small psums + one small all-gather per layer
+            # instead of an FSDP weight gather (§Perf grok-decode iteration).
+            dsz = mesh.shape["data"]
+            d_loc = d // dsz
+            ds = jax.lax.axis_index("data")
+            xg = jax.lax.all_gather(xl, "data", axis=0, tiled=True)  # (B*,1,d)
+            Bf = xg.shape[0]
+            top_w, flat_e, pos, keep, C = _moe_route(router, cfg, xg)
+            dest = jnp.where(keep, flat_e * C + pos, E * C)
+            buf = _gather_dispatch(xg, dest, E * C, K)          # (B*,EC,d)
+            buf = buf.reshape(Bf, E, C, d)
+            buf_sl = jax.lax.dynamic_slice_in_dim(buf, ds * d_loc, d_loc, 3)
+            gate = jax.lax.psum(
+                jnp.einsum("becd,edf->becf", buf_sl, wi[:, 0]), "data")
+            up = jax.lax.psum(
+                jnp.einsum("becd,edf->becf", buf_sl, wi[:, 1]), "data")
+            h = L.swiglu(gate, up)
+            out = jax.lax.psum(
+                jnp.einsum("becf,efd->becd", h, wo), "model")   # (B*,E,C,d_loc)
+            y = _combine(out, dest, top_w, Bf, 1, E * C, xl.dtype)
+            y = jax.lax.all_gather(y, "data", axis=2, tiled=True)  # (B*,1,d)
+            B_loc = Bf // dsz
+            return jax.lax.dynamic_slice_in_dim(y, ds * B_loc, B_loc, 0)
+
+        top_w, flat_e, pos, keep, C = _moe_route(router, cfg, xl)
+        if ep:
+            E_loc = E // m
+            lo = jax.lax.axis_index("model") * E_loc
+            mine = (flat_e >= lo) & (flat_e < lo + E_loc) & keep
+            dest = jnp.where(mine, (flat_e - lo) * C + pos, E_loc * C)
+            n_slots = E_loc * C
+            wi_l, wo_l = wi, wo
+        else:
+            dest = jnp.where(keep, flat_e * C + pos, E * C)
+            n_slots = E * C
+            if fsdp:                        # FSDP: re-gather d over data
+                wi_l = jax.lax.all_gather(wi, "data", axis=2, tiled=True)
+                wo_l = jax.lax.all_gather(wo, "data", axis=2, tiled=True)
+            else:
+                wi_l, wo_l = wi, wo
+        buf = _gather_dispatch(xl, dest, n_slots, K)
+        buf = buf.reshape(B, -1, C, d)
+        out = _expert_compute(buf, wi_l, wo_l)                 # (B,E_loc,C,d)
+        y = _combine(out, dest, top_w, B, S, n_slots, xl.dtype)
+        return jax.lax.psum(y, "model")
+
+    return jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(router_spec, wi_spec, wo_spec, x_spec),
+        out_specs=x_spec, check_vma=False,
+    )(p["router"]["kernel"], p["wi"], p["wo"], x)
+
+
+def moe_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.parallel.sharding import current_mesh, _state
+    mesh = current_mesh()
+    if (mesh is not None and _state().rules is not None
+            and "model" in mesh.axis_names and mesh.shape["model"] > 1):
+        return _moe_apply_shard_map(p, cfg, x, mesh)
+    return _moe_apply_dense(p, cfg, x)
+
+
+def moe_aux_loss(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Load-balancing auxiliary loss (Switch-style): E * Σ_e f_e * p_e."""
+    gates = L.dense_apply(p["router"], x.astype(jnp.float32))
+    probs = jax.nn.softmax(gates, axis=-1)                     # (B,S,E)
+    top_e = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top_e, cfg.n_experts), axis=(0, 1))
+    pbar = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(f * pbar)
+
+
+# ---------------------------------------------------------------------------
+# transformer block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, *, moe: Optional[bool] = None) -> Params:
+    moe = cfg.family in ("moe",) if moe is None else moe
+    ka, kf = jax.random.split(key)
+    return {
+        "attn_norm": norm_init(cfg, cfg.d_model),
+        "attn": attn_init(ka, cfg),
+        "ffn_norm": norm_init(cfg, cfg.d_model),
+        "ffn": moe_init(kf, cfg) if moe else ffn_init(kf, cfg),
+    }
+
+
+def block_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
+                *, moe: Optional[bool] = None, causal: bool = True) -> jnp.ndarray:
+    moe = cfg.family in ("moe",) if moe is None else moe
+    h = norm_apply(cfg, p["attn_norm"], x)
+    x = x + attention_apply(p["attn"], cfg, h, positions, causal=causal)
+    h = norm_apply(cfg, p["ffn_norm"], x)
+    x = x + (moe_apply(p["ffn"], cfg, h) if moe else ffn_apply(p["ffn"], cfg, h))
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def block_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, positions,
+                 kc, vc, index, *, moe: Optional[bool] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    moe = cfg.family in ("moe",) if moe is None else moe
+    h = norm_apply(cfg, p["attn_norm"], x)
+    a, kc, vc = attention_decode(p["attn"], cfg, h, positions, kc, vc, index)
+    x = x + a
+    h = norm_apply(cfg, p["ffn_norm"], x)
+    x = x + (moe_apply(p["ffn"], cfg, h) if moe else ffn_apply(p["ffn"], cfg, h))
+    return x, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# LM: init / forward / cache / decode  (families: dense, moe, vlm)
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def lm_init(key, cfg: ModelConfig) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    layer_params = jax.vmap(lambda k: block_init(k, cfg))(lkeys)
+    p = {"layers": layer_params, "out_norm": norm_init(cfg, cfg.d_model)}
+    p["embed"] = L.embed_init(ke, cfg.vocab, cfg.d_model, dtype=cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab, dtype=cfg.param_dtype)
+    return p
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.pos == "mrope":
+        # stub 3D positions: text-only stream (all three streams equal)
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def lm_forward(params: Params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
+               *, embeds: Optional[jnp.ndarray] = None,
+               positions=None, train: bool = False) -> jnp.ndarray:
+    """Full-sequence forward → logits (B,S,V). `embeds` (B,S,d) replaces token
+    embedding for stub-frontend archs (vlm/audio)."""
+    if embeds is None:
+        x = L.embed_apply(params["embed"], tokens).astype(cfg.compute_dtype)
+    else:
+        x = embeds.astype(cfg.compute_dtype)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    body = lambda xx, lp: (block_apply(lp_tree(lp), cfg, xx, positions), None)
+    body = _remat(body, cfg) if train else body
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = norm_apply(cfg, params["out_norm"], x)
+    logits = _lm_head(params, cfg, x)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def lp_tree(lp):
+    return lp
+
+
+def _lm_head(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings or "lm_head" not in params:
+        return L.embed_attend(params["embed"], x)
+    return L.dense_apply(params["lm_head"], x)
+
+
+def lm_prefill(params: Params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
+               *, embeds: Optional[jnp.ndarray] = None,
+               positions=None) -> Tuple[jnp.ndarray, Params]:
+    """Full-sequence prefill → (logits, KV cache covering the prompt)."""
+    if embeds is None:
+        x = L.embed_apply(params["embed"], tokens).astype(cfg.compute_dtype)
+    else:
+        x = embeds.astype(cfg.compute_dtype)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(xx, lp):
+        h = norm_apply(cfg, lp["attn_norm"], xx)
+        a, (k, v) = attention_apply(lp["attn"], cfg, h, positions,
+                                    causal=True, return_kv=True)
+        xx = xx + a
+        h = norm_apply(cfg, lp["ffn_norm"], xx)
+        moe = cfg.family in ("moe",)
+        xx = xx + (moe_apply(lp["ffn"], cfg, h) if moe else ffn_apply(lp["ffn"], cfg, h))
+        return xx, (k.astype(cfg.param_dtype), v.astype(cfg.param_dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = norm_apply(cfg, params["out_norm"], x)
+    logits = _lm_head(params, cfg, x[:, -1:])
+    return logits, {"k": ks, "v": vs}
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    hd, KV = cfg.head_dim, cfg.n_kv_heads
+    shape = (cfg.n_layers, batch, max_len, KV, hd)
+    return {"k": jnp.zeros(shape, cfg.param_dtype),
+            "v": jnp.zeros(shape, cfg.param_dtype)}
+
+
+def lm_decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   cache: Params, index: jnp.ndarray,
+                   *, embeds: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step. tokens:(B,1); cache from lm_init_cache; index: scalar.
+    Returns (logits (B,1,V), new_cache)."""
+    if embeds is None:
+        x = L.embed_apply(params["embed"], tokens).astype(cfg.compute_dtype)
+    else:
+        x = embeds.astype(cfg.compute_dtype)
+    B = x.shape[0]
+    pos = default_positions(cfg, B, 1, offset=index)
+
+    def body(xx, scanned):
+        lp, kc, vc = scanned
+        y, kc, vc = block_decode(lp, cfg, xx, pos, kc, vc, index)
+        return y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = norm_apply(cfg, params["out_norm"], x)
+    logits = _lm_head(params, cfg, x)
+    return logits, {"k": k_new, "v": v_new}
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy; logits (B,S,V) fp32-softmaxed, labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, train: bool = True) -> jnp.ndarray:
+    logits = lm_forward(params, cfg, batch.get("tokens"),
+                        embeds=batch.get("embeds"),
+                        positions=batch.get("positions"), train=train)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss

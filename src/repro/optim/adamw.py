@@ -1,0 +1,96 @@
+"""AdamW with mixed precision (bf16 params / fp32 master+moments), global-norm
+clipping, and optional ZeRO-1 style optimizer-state sharding (the launcher
+assigns the opt-state PartitionSpecs; this module is sharding-agnostic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    master_dtype: Any = jnp.float32
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    master: Params     # fp32 master copy of params
+    m: Params
+    v: Params
+
+
+def init(cfg: AdamWConfig, params: Params) -> OptState:
+    # NB: jnp.array(copy=True) — with fp32 params, astype would alias the
+    # param buffer and break donation (same buffer donated twice).
+    master = jax.tree.map(lambda p: jnp.array(p, dtype=cfg.master_dtype,
+                                              copy=True), params)
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return OptState(jnp.zeros((), jnp.int32), master,
+                    jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def apply_updates(cfg: AdamWConfig, params: Params, grads: Params,
+                  state: OptState) -> Tuple[Params, OptState, Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        g = g.astype(jnp.float32)
+        m = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g)
+        v = (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g))
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master.astype(jnp.float32)
+        new_master = master.astype(jnp.float32) - lr * delta
+        return (new_master.astype(cfg.master_dtype),
+                m.astype(cfg.moment_dtype), v.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, state.master, grads, state.m, state.v)
+    new_master = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype), new_master, params)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_master, new_m, new_v), metrics

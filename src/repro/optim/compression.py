@@ -1,0 +1,91 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two schemes, both with error feedback (the residual re-enters the next step
+so compression bias doesn't accumulate — Karimireddy et al. style):
+
+  - top-k sparsification: keep the k largest-magnitude entries per tensor,
+  - int8 stochastic quantization: per-tensor scale, round-to-nearest with
+    dithering.
+
+``compress → (simulated) all-reduce → decompress`` composes with the trainer;
+on a real pod the sparse values+indices ride a smaller all-gather instead of
+the dense all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"          # none | topk | int8
+    topk_ratio: float = 0.01      # keep 1% of entries
+    seed: int = 0
+
+
+class CompressionState(NamedTuple):
+    residual: Any                 # error-feedback memory (grad-shaped pytree)
+    step: jnp.ndarray
+
+
+def init_state(cfg: CompressionConfig, grads_like: Any) -> CompressionState:
+    return CompressionState(jax.tree.map(jnp.zeros_like, grads_like),
+                            jnp.zeros((), jnp.int32))
+
+
+def _topk_compress(g: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Zero all but the top-k |entries| (dense masked representation; the
+    wire format would be (values, indices))."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    return (flat * mask).reshape(g.shape)
+
+
+def _int8_compress(g: jnp.ndarray, key) -> jnp.ndarray:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(g / scale + noise), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(cfg: CompressionConfig, grads: Any,
+                   state: CompressionState) -> Tuple[Any, CompressionState]:
+    """Apply error-feedback compression. Returns (compressed_grads, state')."""
+    if cfg.scheme == "none":
+        return grads, state
+    step = state.step + 1
+
+    def one(g, r, key):
+        gf = g.astype(jnp.float32) + r.astype(jnp.float32)
+        if cfg.scheme == "topk":
+            c = _topk_compress(gf, cfg.topk_ratio)
+        elif cfg.scheme == "int8":
+            c = _int8_compress(gf, key)
+        else:
+            raise KeyError(cfg.scheme)
+        return c.astype(g.dtype), (gf - c).astype(r.dtype)
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = jax.tree_util.tree_leaves(state.residual)
+    keys = jax.random.split(jax.random.fold_in(jax.random.key(cfg.seed), step),
+                            len(leaves))
+    outs = [one(g, r, k) for g, r, k in zip(leaves, res_leaves, keys)]
+    comp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    resid = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return comp, CompressionState(resid, step)
+
+
+def compression_ratio(cfg: CompressionConfig) -> float:
+    """Wire-bytes multiplier vs dense fp32 all-reduce (for the roofline's
+    collective term)."""
+    if cfg.scheme == "topk":
+        return cfg.topk_ratio * 2.0   # values + indices
+    if cfg.scheme == "int8":
+        return 0.25
+    return 1.0

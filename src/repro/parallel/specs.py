@@ -1,0 +1,284 @@
+"""Parameter / cache / optimizer PartitionSpec trees.
+
+Path-based logical-axis rules: every parameter path maps to a tuple of
+logical axis names, resolved against the active mesh by
+``repro.parallel.sharding.resolve_spec`` (axes absent from the mesh degrade
+to replication, so the same rules serve 1-device tests and 512-chip pods).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import resolve_spec
+
+# (path regex, logical axes for the *trailing* dims of the array)
+PARAM_RULES = [
+    (r"embed/embedding$", ("vocab", "embed")),
+    (r"lm_head/kernel$", ("embed", "vocab")),
+    (r"ffn/wi$", ("expert", None, "embed", "mlp")),    # MoE (E, 2, d, ff)
+    (r"ffn/wo$", ("expert", "mlp", "embed")),
+    (r"ffn/wi/kernel$", ("embed", "mlp")),             # dense FFN
+    (r"ffn/wo/kernel$", ("mlp", "embed")),
+    (r"ffn/wi/bias$", ("mlp",)),
+    (r"ffn/wo/bias$", ("embed",)),
+    (r"wq$", ("embed", "heads", None)),                # 3-D head-structured
+    (r"(wk|wv)$", ("embed", "kv_heads", None)),
+    (r"wo$", ("heads", None, "embed")),
+    (r"router/kernel$", ("embed", None)),
+    (r"in_proj/kernel$", ("embed", "ssm_inner")),
+    (r"out_proj/kernel$", ("ssm_inner", "embed")),
+    (r"conv_w$", (None, "conv_ch")),
+    (r"conv_b$", ("conv_ch",)),
+    (r"(A_log|D|dt_bias)$", (None,)),
+    (r"out_norm/scale$", (None,)),
+    (r".*norm.*/(scale|bias)$", (None,)),
+    (r".*", (None,)),  # fallback: replicate
+]
+
+_STACK_KEYS = ("layers", "periods", "enc_layers", "dec_layers")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_axes_for(path_str: str, ndim: int) -> Tuple[Optional[str], ...]:
+    stacked = any(k in path_str.split("/") for k in _STACK_KEYS)
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path_str):
+            axes = tuple(axes)
+            if stacked and len(axes) < ndim:
+                axes = ("stack",) * (ndim - len(axes)) + axes
+            if len(axes) != ndim:  # rank mismatch (e.g. fallback on 2-D) → replicate
+                axes = (None,) * ndim
+            return axes
+    return (None,) * ndim
+
+
+def param_specs(params_shape: Any, mesh: Optional[Mesh] = None,
+                cfg: Any = None, kind: Optional[str] = None) -> Any:
+    """PartitionSpec pytree for a params (or eval_shape'd params) pytree.
+
+    With `cfg` + `kind`, applies arch-aware fallbacks when the primary
+    sharding would not divide evenly:
+      - GQA with kv_heads % model != 0:
+          train/prefill → input-dim-shard wk/wv ('model' on d, psum after);
+          decode        → head_dim-shard wk/wv (matches hd-sharded KV cache).
+      - MoE with n_experts % model != 0 → shard the expert FFN dim instead
+        (tensor-parallel experts: every chip holds all experts, ff/TP each).
+    """
+    model_sz = mesh.shape.get("model", 1) if mesh is not None else 1
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        axes = logical_axes_for(ps, len(shape))
+        spec = resolve_spec(axes, mesh=mesh)
+        if cfg is None or mesh is None or model_sz == 1:
+            return spec
+        if re.search(r"(wk|wv)$", ps) and cfg.n_kv_heads % model_sz != 0:
+            d, kvh, hd = shape[-3:]
+            pre = (None,) * (len(shape) - 3)
+            if kind == "decode":
+                # cache is sequence-sharded on `model` (flash-decoding);
+                # the new token's k/v must be replicated → replicate wk/wv
+                # (they are tiny relative to the cache).
+                return P(*pre)
+            if d % model_sz == 0:
+                return P(*pre, "model", None, None)
+            return P(*pre)
+        if cfg.n_experts and cfg.n_experts % model_sz != 0 and len(shape) >= 3:
+            # experts can't shard on `model`: 2-D-shard each expert matrix
+            # instead — d over `data` (FSDP-style re-gather), ff over `model`.
+            data_ok = "data" in mesh.axis_names and cfg.d_model % mesh.shape["data"] == 0
+            if re.search(r"ffn/wi$", ps):  # (…, E, 2, d, ff)
+                return P(*(None,) * (len(shape) - 2),
+                         "data" if data_ok else None, "model")
+            if re.search(r"ffn/wo$", ps):  # (…, E, ff, d)
+                return P(*(None,) * (len(shape) - 2), "model",
+                         "data" if data_ok else None)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def shardings_from_specs(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def zero1_specs(spec_tree: Any, shape_tree: Any, mesh: Mesh,
+                axis: str = "data") -> Any:
+    """ZeRO-1: additionally shard optimizer-state tensors along `axis` on the
+    first dimension that is currently unsharded and divisible by the axis size.
+    """
+    if axis not in mesh.axis_names:
+        return spec_tree
+    size = mesh.shape[axis]
+
+    def upgrade(spec: P, sds) -> P:
+        dims = list(spec) + [None] * (len(sds.shape) - len(spec))
+        used = set()
+        for d in dims:
+            if d is None:
+                continue
+            used.update((d,) if isinstance(d, str) else d)
+        if axis in used:
+            return spec
+        for i, (cur, dim) in enumerate(zip(dims, sds.shape)):
+            if cur is None and dim % size == 0 and dim >= size:
+                dims[i] = axis
+                return P(*dims)
+        return spec
+
+    return jax.tree.map(upgrade, spec_tree, shape_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# divisibility sanitization
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop (or shrink) sharded axes that do not divide their dim: explicit
+    jit in_shardings must divide evenly; intermediates may be uneven but
+    inputs must not."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axes in zip(shape, dims):
+        if axes is None:
+            out.append(None)
+            continue
+        cand = axes if isinstance(axes, tuple) else (axes,)
+        picked = None
+        # try full tuple, then suffixes (drop leading axes), then single axes
+        trials = [cand] + [cand[i:] for i in range(1, len(cand))] + \
+                 [(a,) for a in cand]
+        for t in trials:
+            if t and dim % _axis_size(mesh, t) == 0:
+                picked = t if len(t) > 1 else t[0]
+                break
+        out.append(picked)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sanitize_tree(spec_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s, sds: sanitize_spec(s, sds.shape, mesh),
+        spec_tree, shape_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# cache specs (decode KV / SSM state)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache_shape: Any, mesh: Optional[Mesh], *,
+                seq_sharded: bool = False) -> Any:
+    """PartitionSpec tree for a decode cache, divisibility-aware.
+
+    seq_sharded=True (long-context, tiny batch): shard the KV sequence dim on
+    the data axis (sequence parallelism) instead of batch.
+    For the head dims, prefer kv_heads on `model`; if the arch's KV head count
+    doesn't divide the axis (MQA/GQA), fall back to sharding head_dim.
+    """
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if mesh is None:
+            return P()
+        batch_ax = None if seq_sharded else "batch"
+        if name.endswith(("k", "v", "ck", "cv")):
+            # KV heads shard on `model` when they divide; otherwise shard the
+            # *sequence* dim on `model` (flash-decoding style context
+            # parallelism: per-layer cost = tiny softmax-stat psums + an
+            # out all-reduce, instead of all-gathering the cache).
+            kv_dim = leaf.shape[-2]
+            kv_sz = _axis_size(mesh, resolve_spec(("kv_heads",), mesh=mesh)[0] or ())
+            seq_axes = []
+            if seq_sharded:
+                seq_axes.append("seq_shard")
+            kv_ok = kv_sz > 1 and kv_dim % kv_sz == 0
+            if not kv_ok:
+                seq_axes.append("seq_model_shard")
+            base = [batch_ax, tuple(seq_axes) if seq_axes else None,
+                    "kv_heads" if kv_ok else None, None]
+        elif name.endswith("conv"):
+            base = [batch_ax, None, "conv_ch"]
+        elif name.endswith("state"):
+            h_dim, p_dim = leaf.shape[-3], leaf.shape[-2]
+            h_sz = _axis_size(mesh, resolve_spec(("ssm_inner",), mesh=mesh)[0] or ())
+            if h_sz > 1 and h_dim % h_sz != 0 and p_dim % h_sz == 0:
+                base = [batch_ax, None, "head_dim_shard", None]
+            else:
+                base = [batch_ax, "ssm_inner", None, None]
+        else:
+            base = [None] * nd
+        base = [None] * (nd - len(base)) + list(base[:nd])
+        rules_extra = {"head_dim_shard": "model", "seq_model_shard": "model"}
+        from repro.parallel.sharding import _state, DEFAULT_RULES
+        rules = dict(_state().rules or DEFAULT_RULES)
+        rules.update(rules_extra)
+
+        def expand(ax):
+            if isinstance(ax, tuple):
+                out = []
+                for a in ax:
+                    r = rules.get(a)
+                    if r is None:
+                        continue
+                    out.extend((r,) if isinstance(r, str) else r)
+                return tuple(a for a in out if a in mesh.axis_names) or None
+            return ax
+
+        # resolve tuple entries manually, single names via resolve_spec
+        resolved = []
+        used = set()
+        for ax in base:
+            if isinstance(ax, tuple):
+                axes = expand(ax)
+                if axes:
+                    axes = tuple(a for a in axes if a not in used)
+                    used.update(axes)
+                resolved.append(axes if axes else None)
+            elif ax is None:
+                resolved.append(None)
+            else:
+                r = rules.get(ax)
+                if isinstance(r, tuple):
+                    r = tuple(a for a in r if a in mesh.axis_names and a not in used)
+                    r = r if r else None
+                elif isinstance(r, str):
+                    r = r if (r in mesh.axis_names and r not in used) else None
+                if r is not None:
+                    used.update((r,) if isinstance(r, str) else r)
+                resolved.append(r)
+        spec = P(*resolved)
+        return sanitize_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)

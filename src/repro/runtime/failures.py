@@ -1,0 +1,65 @@
+"""Failure injection + elastic re-planning helpers.
+
+`FailureInjector` drives chaos-testing of the serving loop (crash devices on
+a schedule, flap links). `replan` rebuilds the RoCoIn plan on the surviving
+fleet and remaps existing distilled students to partitions — placement-only
+recovery, no re-training (weights are content-addressed by partition)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import planner as PL
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    at_request: int
+    device: str
+    kind: str = "crash"           # crash | recover
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    events: List[FailureEvent]
+    _down: set = dataclasses.field(default_factory=set)
+    _count: int = 0
+
+    def tick(self) -> set:
+        """Advance one request; returns the set of currently-down devices."""
+        for e in self.events:
+            if e.at_request == self._count:
+                if e.kind == "crash":
+                    self._down.add(e.device)
+                else:
+                    self._down.discard(e.device)
+        self._count += 1
+        return set(self._down)
+
+
+def replan(devices: Sequence[Device], A: np.ndarray,
+           students: Sequence[StudentArch], *, d_th: Optional[float],
+           p_th: float, seed: int = 0) -> PL.Plan:
+    """Elastic re-plan on the surviving fleet (same Algorithm 1)."""
+    if d_th is None:
+        return PL.tune_d_th(devices, A, students, p_th=p_th, seed=seed)
+    return PL.make_plan(devices, A, students, d_th=d_th, p_th=p_th, seed=seed)
+
+
+def remap_students(old_plan: PL.Plan, new_plan: PL.Plan) -> Dict[int, int]:
+    """Map new partition slots → old partition slots by maximum filter-set
+    overlap, so already-distilled students redeploy without retraining."""
+    mapping = {}
+    for ni, ng in enumerate(new_plan.groups):
+        best, best_ov = 0, -1
+        nset = set(ng.filters.tolist())
+        for oi, og in enumerate(old_plan.groups):
+            ov = len(nset & set(og.filters.tolist()))
+            if ov > best_ov:
+                best, best_ov = oi, ov
+        mapping[ni] = best
+    return mapping

@@ -1,0 +1,138 @@
+"""Fault-tolerant quorum serving runtime (RoCoIn Fig. 1, runtime phase).
+
+The source node:
+  1. batches incoming requests,
+  2. broadcasts the input to every live replica worker,
+  3. collects portions; a partition is satisfied by its FIRST arriving
+     replica (replication masks crashes/timeouts),
+  4. starts the FC merge as soon as one replica of every partition arrived
+     (quorum) OR the deadline expires — late/missing portions are zeroed
+     (degraded mode, the paper's §V behaviour),
+  5. straggler mitigation: requests are *hedged* — all replicas of a group
+     compute in parallel by design, so a straggler only hurts if ALL its
+     group's members straggle,
+  6. elastic: on permanent device loss the planner re-plans and students are
+     re-deployed (weights already distilled; only placement changes).
+
+Latency accounting uses the paper's Eq. 1a device model; the actual portion
+math runs as real JAX computation, and the merge uses the fused Pallas
+quorum_aggregate kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grouping import Device
+from repro.core.planner import Plan
+from repro.core.simulator import FailureModel
+from repro.kernels import ops as K
+
+
+@dataclasses.dataclass
+class ServeResult:
+    logits: np.ndarray
+    latency: float
+    arrived: np.ndarray           # (K,) bool
+    degraded: bool
+    failed_devices: List[str]
+
+
+@dataclasses.dataclass
+class QuorumServer:
+    plan: Plan
+    portion_fns: List[Callable[[jnp.ndarray], jnp.ndarray]]  # per partition
+    fc_weights: jnp.ndarray       # (K, Dk, C) padded per-partition FC slices
+    fc_bias: jnp.ndarray          # (C,)
+    deadline: float = float("inf")
+    failure: FailureModel = dataclasses.field(default_factory=FailureModel)
+    rng: np.random.Generator = dataclasses.field(
+        default_factory=lambda: np.random.default_rng(0))
+
+    def _replica_latencies(self, g) -> List[Tuple[str, float, bool]]:
+        out = []
+        for d in g.devices:
+            alive = self.failure.device_alive(self.rng, d)
+            t = (g.student.flops / d.c_core + 8.0 * g.student.out_bytes / d.r_tran
+                 if g.student else float("inf"))
+            out.append((d.name, t, alive))
+        return out
+
+    def serve(self, x: jnp.ndarray) -> ServeResult:
+        Kp = self.plan.K
+        arrived = np.zeros(Kp, bool)
+        lat = np.full(Kp, np.inf)
+        failed: List[str] = []
+        for slot, g in enumerate(self.plan.groups):
+            for name, t, alive in self._replica_latencies(g):
+                if not alive:
+                    failed.append(name)
+                    continue
+                if t <= self.deadline:
+                    lat[slot] = min(lat[slot], t)
+                    arrived[slot] = True
+        # compute arrived portions (real JAX math)
+        Dk = self.fc_weights.shape[1]
+        portions = []
+        B = x.shape[0]
+        for kslot in range(Kp):
+            if arrived[kslot]:
+                p = self.portion_fns[kslot](x)
+                if p.shape[-1] < Dk:          # pad to the uniform width
+                    p = jnp.pad(p, ((0, 0), (0, Dk - p.shape[-1])))
+                portions.append(p)
+            else:
+                portions.append(jnp.zeros((B, Dk), jnp.float32))
+        stacked = jnp.stack(portions)          # (K, B, Dk)
+        logits = K.quorum_aggregate(stacked, self.fc_weights, self.fc_bias,
+                                    jnp.asarray(arrived, jnp.int32))
+        latency = float(lat[arrived].max()) if arrived.any() else float("inf")
+        return ServeResult(np.asarray(logits), latency, arrived,
+                           degraded=not arrived.all(), failed_devices=failed)
+
+    # -- elastic re-planning -------------------------------------------------
+
+    def remove_device(self, name: str) -> None:
+        """Permanent loss: drop the device; empty groups keep their partition
+        but will always miss quorum until replan_on() is called."""
+        for g in self.plan.groups:
+            g.devices = [d for d in g.devices if d.name != name]
+
+    def live_devices(self) -> List[Device]:
+        return [d for g in self.plan.groups for d in g.devices]
+
+
+def server_from_ensemble(ens, deadline: float = float("inf"),
+                         failure: Optional[FailureModel] = None,
+                         seed: int = 0) -> QuorumServer:
+    """Build a QuorumServer from a core.pipeline.Ensemble."""
+    Dk = max(ens.part_dims)
+    C = ens.fc["bias"].shape[0]
+    Kp = len(ens.students)
+    # split the FC kernel into per-partition slices, padded to uniform Dk
+    weights = np.zeros((Kp, Dk, C), np.float32)
+    off = 0
+    for kslot, dim in enumerate(ens.part_dims):
+        weights[kslot, :dim] = np.asarray(ens.fc["kernel"][off:off + dim])
+        off += dim
+
+    def make_fn(kslot):
+        cfg, params, fwd = ens.students[kslot]
+        def fn(x):
+            _, feats, _ = fwd(params, cfg, x)
+            return feats
+        return fn
+
+    return QuorumServer(
+        plan=ens.plan,
+        portion_fns=[make_fn(i) for i in range(Kp)],
+        fc_weights=jnp.asarray(weights),
+        fc_bias=jnp.asarray(ens.fc["bias"]),
+        deadline=deadline,
+        failure=failure or FailureModel(),
+        rng=np.random.default_rng(seed),
+    )

@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import tiny_version
+from repro.configs.base import all_archs
+from repro.models import api
+
+ARCHS = sorted(all_archs())
+
+
+def _batch(cfg, B=2, S=32):
+    key = jax.random.key(1)
+    bd = {}
+    if cfg.embed_inputs:
+        bd["embeds"] = 0.1 * jax.random.normal(key, (B, S, cfg.d_model),
+                                               cfg.compute_dtype)
+        if cfg.family == "encdec":
+            bd["tokens"] = jnp.zeros((B, S), jnp.int32)
+        if cfg.pos == "mrope":
+            bd["positions"] = jnp.broadcast_to(
+                jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    else:
+        bd["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    bd["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return bd
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = tiny_version(all_archs()[arch])
+    params = api.init(jax.random.key(0), cfg)
+    B, S = 2, 32
+    bd = _batch(cfg, B, S)
+    logits = api.forward(params, cfg, bd)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = tiny_version(all_archs()[arch])
+    params = api.init(jax.random.key(0), cfg)
+    bd = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss(p, cfg, bd))(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = tiny_version(all_archs()[arch])
+    params = api.init(jax.random.key(0), cfg)
+    B, S = 2, 16
+    cache = api.init_cache(cfg, B, S)
+    bd = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    logits, cache2 = api.decode_step(params, cfg, bd, cache, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache structurally unchanged
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-130m",
+                                  "jamba-v0.1-52b", "whisper-medium"])
+def test_prefill_matches_decode(arch):
+    """Prefill-then-decode must equal pure decode token-by-token."""
+    cfg = tiny_version(all_archs()[arch])
+    params = api.init(jax.random.key(0), cfg)
+    B, S = 1, 8
+    bd = _batch(cfg, B, S)
+    # full forward logits
+    full = api.forward(params, cfg, bd)
+    if cfg.family == "encdec":
+        # decode path consumes decoder tokens; cross-kv from prefill
+        logits_p, cache = api.prefill(params, cfg, bd)
+        np.testing.assert_allclose(np.asarray(logits_p[:, -1], np.float32),
+                                   np.asarray(full[:, -1], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        return
+    # token-by-token decode must reproduce the full-sequence logits
+    cache = api.init_cache(cfg, B, S)
+    toks = bd.get("tokens")
+    if toks is None:
+        return
+    outs = []
+    for t in range(S):
+        dbd = {"tokens": toks[:, t:t + 1]}
+        lg, cache = api.decode_step(params, cfg, dbd, cache, jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,196 @@
+"""Unit tests for the RoCoIn core: activation graph, Ncut, grouping,
+Hungarian assignment, planner, simulator."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import activation_graph as AG
+from repro.core import assignment as ASG
+from repro.core import grouping as GRP
+from repro.core import ncut as NC
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+
+
+def _fleet(n=8, seed=0):
+    return SIM.make_fleet(n, seed=seed)
+
+
+def _students():
+    return [
+        StudentArch("small", flops=5e6, params=0.6e6, out_bytes=64, capacity=0.15e6),
+        StudentArch("mid", flops=20e6, params=1.5e6, out_bytes=64, capacity=0.4e6),
+        StudentArch("big", flops=50e6, params=3.5e6, out_bytes=64, capacity=1.2e6),
+    ]
+
+
+def _graph(M=32, seed=0):
+    rng = np.random.default_rng(seed)
+    acts = np.abs(rng.normal(size=(64, M))).astype(np.float32)
+    return np.asarray(AG.activation_graph(jnp.asarray(acts)))
+
+
+# -- activation graph ---------------------------------------------------------
+
+def test_activation_graph_symmetric_nonneg_zero_diag():
+    A = _graph()
+    assert np.allclose(A, A.T)
+    assert (A >= 0).all()
+    assert np.allclose(np.diag(A), 0)
+
+
+def test_average_activity_shapes():
+    fm = jnp.ones((4, 8, 8, 16))
+    a = AG.average_activity(fm)
+    assert a.shape == (4, 16)
+    a2 = AG.average_activity(jnp.ones((4, 10, 16)))
+    assert a2.shape == (4, 16)
+
+
+# -- ncut ---------------------------------------------------------------------
+
+def test_ncut_partition_covers_disjoint():
+    A = _graph(M=24)
+    parts = NC.ncut_partition(A, 4)
+    allidx = np.concatenate(parts)
+    assert sorted(allidx.tolist()) == list(range(24))
+    assert len(allidx) == len(set(allidx.tolist()))
+
+
+def test_ncut_separates_two_blocks():
+    """Two dense blocks with weak cross edges → Ncut must find them."""
+    M = 16
+    A = np.full((M, M), 0.01)
+    A[:8, :8] = 1.0
+    A[8:, 8:] = 1.0
+    np.fill_diagonal(A, 0)
+    parts = NC.ncut_partition(A, 2)
+    sets = [set(p.tolist()) for p in parts]
+    assert {frozenset(range(8)), frozenset(range(8, 16))} == \
+           {frozenset(s) for s in sets}
+
+
+def test_ncut_value_lower_for_good_cut():
+    M = 16
+    A = np.full((M, M), 0.01)
+    A[:8, :8] = 1.0
+    A[8:, 8:] = 1.0
+    np.fill_diagonal(A, 0)
+    good = [np.arange(8), np.arange(8, 16)]
+    bad = [np.arange(0, 16, 2), np.arange(1, 16, 2)]
+    assert NC.ncut_value(A, good) < NC.ncut_value(A, bad)
+
+
+# -- grouping -----------------------------------------------------------------
+
+def test_follow_the_leader_covers_all_devices():
+    fleet = _fleet(10)
+    g = GRP.follow_the_leader(fleet, d_th=1.0, p_th=0.05)
+    names = [d.name for grp in g.groups for d in grp]
+    assert sorted(names) == sorted(d.name for d in fleet)
+    assert len(names) == len(set(names))          # disjoint (1d)
+
+
+def test_small_p_th_forces_replication():
+    fleet = _fleet(8)
+    loose = GRP.follow_the_leader(fleet, d_th=10.0, p_th=0.5)
+    strict = GRP.follow_the_leader(fleet, d_th=10.0, p_th=1e-4)
+    # stricter reliability target ⇒ need more replicas per group ⇒ fewer groups
+    assert strict.K <= loose.K
+
+
+# -- hungarian ----------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+def test_hungarian_matches_bruteforce(n):
+    rng = np.random.default_rng(n)
+    W = rng.random((n, n))
+    cols = ASG.hungarian(W)
+    got = W[np.arange(n), cols].sum()
+    best = max(sum(W[i, p[i]] for i in range(n))
+               for p in itertools.permutations(range(n)))
+    assert np.isclose(got, best)
+    assert sorted(cols.tolist()) == list(range(n))  # a permutation
+
+
+def test_feasible_students_respects_memory():
+    fleet = [Device("a", 1e7, 1.0e6, 500, 0.2), Device("b", 2e7, 2.0e6, 500, 0.2)]
+    S = _students()
+    feas = ASG.feasible_students(fleet, S)
+    assert all(s.params <= 1.0e6 for s in feas)
+
+
+# -- planner ------------------------------------------------------------------
+
+def test_plan_covers_filters_and_devices():
+    fleet = _fleet(8, seed=3)
+    A = _graph(M=32)
+    plan = PL.make_plan(fleet, A, _students(), d_th=2.0, p_th=0.2)
+    filt = np.concatenate([g.filters for g in plan.groups])
+    assert sorted(filt.tolist()) == list(range(32))         # (1c) + (1e)
+    devs = [d.name for g in plan.groups for d in g.devices]
+    assert len(devs) == len(set(devs))                      # (1d)
+
+
+def test_plan_latency_objective_is_max_of_group_latencies():
+    fleet = _fleet(8, seed=4)
+    A = _graph(M=16)
+    plan = PL.make_plan(fleet, A, _students(), d_th=2.0, p_th=0.2)
+    if plan.feasible:
+        assert plan.latency == max(g.latency for g in plan.groups)
+
+
+def test_rocoin_beats_nonn_on_straggler_fleet():
+    """The paper's central latency claim (Fig. 7): uniform NoNN is
+    bottlenecked by a straggler forced to run the common (large) student,
+    while heterogeneity-aware assignment gives the straggler a small model."""
+    fast = [Device(f"fast{i}", c_core=3e7, c_mem=4e6, r_tran=1e3, p_out=0.1)
+            for i in range(7)]
+    straggler = [Device("slow", c_core=2e6, c_mem=4e6, r_tran=1e3, p_out=0.1)]
+    fleet = fast + straggler
+    A = _graph(M=32)
+    S = _students()
+    nonn = PL.plan_nonn(fleet, A, S)       # everyone gets the big student
+    het = PL.plan_hetnonn(fleet, A, S)     # straggler gets a small student
+    assert het.latency < nonn.latency
+    rocoin = PL.tune_d_th(fleet, A, S, p_th=0.5)
+    assert rocoin.latency <= nonn.latency + 1e-9
+
+
+# -- simulator ----------------------------------------------------------------
+
+def test_simulator_no_failures_completes():
+    fleet = [Device(f"d{i}", 1e7, 2e6, 500, 0.0) for i in range(4)]
+    A = _graph(M=16)
+    plan = PL.make_plan(fleet, A, _students(), d_th=10.0, p_th=1.0)
+    res = SIM.simulate(plan, trials=20, failure=SIM.FailureModel())
+    assert res["complete_rate"] == 1.0
+    assert np.isfinite(res["mean_latency"])
+
+
+def test_simulator_forced_failures_degrade_coverage():
+    fleet = [Device(f"d{i}", 1e7, 2e6, 500, 0.0) for i in range(4)]
+    A = _graph(M=16)
+    plan = PL.make_plan(fleet, A, _students(), d_th=10.0, p_th=1.0)
+    down = [d.name for g in plan.groups for d in g.devices][:2]
+    res = SIM.simulate(plan, trials=10,
+                       failure=SIM.FailureModel(forced_failures=down))
+    assert res["mean_coverage"] < 1.0
+
+
+def test_replication_improves_failure_resilience():
+    """Core paper claim: replicated groups survive crashes better."""
+    fleet = [Device(f"d{i}", 1e7 + i, 2e6, 500, 0.45) for i in range(8)]
+    A = _graph(M=16)
+    S = _students()
+    replicated = PL.make_plan(fleet, A, S, d_th=100.0, p_th=0.25)  # forces groups
+    solo = PL.plan_hetnonn(fleet, A, S)
+    fm = SIM.FailureModel(crash_prob=0.3)
+    r1 = SIM.simulate(replicated, trials=200, seed=1, failure=fm)
+    r2 = SIM.simulate(solo, trials=200, seed=1, failure=fm)
+    assert r1["mean_coverage"] > r2["mean_coverage"]

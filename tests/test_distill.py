@@ -1,0 +1,72 @@
+"""Tests for the KD+AT losses (Eq. 6) and the aggregation path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distill as DS
+
+
+def test_at_loss_zero_for_identical():
+    f = jax.random.normal(jax.random.key(0), (4, 16))
+    assert float(DS.at_loss(f, f)) < 1e-10
+    assert float(DS.at_loss(f, 3.0 * f)) < 1e-10  # scale-invariant (normalized)
+
+
+def test_at_loss_positive_for_different():
+    k1, k2 = jax.random.split(jax.random.key(1))
+    a = jax.random.normal(k1, (4, 16))
+    b = jax.random.normal(k2, (4, 16))
+    assert float(DS.at_loss(a, b)) > 0.01
+
+
+def test_kd_loss_minimized_by_teacher_match():
+    cfg = DS.DistillConfig(alpha=1.0, temperature=2.0)
+    t = jax.random.normal(jax.random.key(2), (8, 10))
+    labels = jnp.argmax(t, -1)
+    matched = float(DS.kd_loss(t, t, labels, cfg))
+    off = float(DS.kd_loss(jnp.roll(t, 1, axis=-1), t, labels, cfg))
+    assert matched < off
+
+
+def test_kd_loss_alpha_blends():
+    t = jax.random.normal(jax.random.key(3), (8, 10))
+    s = jax.random.normal(jax.random.key(4), (8, 10))
+    labels = jnp.argmax(t, -1)
+    hard_only = DS.kd_loss(s, t, labels, DS.DistillConfig(alpha=0.0))
+    soft_only = DS.kd_loss(s, t, labels, DS.DistillConfig(alpha=1.0))
+    mid = DS.kd_loss(s, t, labels, DS.DistillConfig(alpha=0.5))
+    lo, hi = sorted([float(hard_only), float(soft_only)])
+    assert lo - 1e-5 <= float(mid) <= hi + 1e-5
+
+
+def test_aggregate_portions_zero_fills_missing():
+    p0 = jnp.ones((2, 3))
+    agg = DS.aggregate_portions([p0, None], [3, 5])
+    assert agg.shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(agg[:, 3:]), 0.0)
+
+
+def test_aggregate_portions_all_missing_raises():
+    with pytest.raises(ValueError):
+        DS.aggregate_portions([None, None], [3, 5])
+
+
+def test_distill_gradient_flows():
+    """Eq. 6 must produce nonzero gradients through both terms."""
+    cfg = DS.DistillConfig(alpha=0.5, beta=10.0)
+    key = jax.random.key(5)
+    t_logits = jax.random.normal(key, (4, 10))
+    t_feats = jax.random.normal(key, (4, 8))
+    labels = jnp.zeros(4, jnp.int32)
+    W = {"proj": jax.random.normal(key, (8, 10)), "feat": jnp.eye(8)}
+
+    def loss(w, x):
+        feats = x @ w["feat"]
+        logits = feats @ w["proj"]
+        return DS.distill_loss(logits, feats, t_logits, t_feats, labels, cfg)
+
+    x = jax.random.normal(key, (4, 8))
+    g = jax.grad(loss)(W, x)
+    assert float(jnp.abs(g["proj"]).sum()) > 0
+    assert float(jnp.abs(g["feat"]).sum()) > 0

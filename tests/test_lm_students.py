@@ -1,0 +1,65 @@
+"""RoCoIn at LM scale: partition a transformer teacher's final hidden
+channels, distill student LMs, aggregate portions (DESIGN.md §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.archs import tiny_version
+from repro.configs.base import get_config
+from repro.core import lm_students as LM
+from repro.core import ncut as NC
+from repro.core.simulator import make_fleet
+from repro.models import api
+
+
+def _teacher():
+    cfg = tiny_version(get_config("tinyllama-1.1b")).with_(n_layers=2)
+    params = api.init(jax.random.key(0), cfg)
+    return params, cfg
+
+
+def test_lm_activation_graph_properties():
+    params, cfg = _teacher()
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab)
+    A = LM.lm_activation_graph(params, cfg, toks)
+    assert A.shape == (cfg.d_model, cfg.d_model)
+    assert np.allclose(A, A.T) and (A >= 0).all()
+    assert np.allclose(np.diag(A), 0)
+
+
+def test_lm_plan_covers_channels():
+    params, cfg = _teacher()
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab)
+    fleet = make_fleet(4, seed=1, mem_range=(1e9, 4e9),
+                       flops_range=(1e12, 5e12))
+    plan, A = LM.plan_lm_rocoin(fleet, params, cfg, toks, p_th=0.3)
+    filt = np.concatenate([g.filters for g in plan.groups])
+    assert sorted(filt.tolist()) == list(range(cfg.d_model))
+
+
+def test_lm_distillation_reduces_loss_and_portions_aggregate():
+    params, cfg = _teacher()
+    key = jax.random.key(2)
+    parts = NC.ncut_partition(
+        LM.lm_activation_graph(params, cfg,
+                               jax.random.randint(key, (2, 32), 0, cfg.vocab)),
+        K=2)
+
+    def batches():
+        i = 0
+        while True:
+            yield jax.random.randint(jax.random.fold_in(key, i), (2, 16),
+                                     0, cfg.vocab)
+            i += 1
+
+    students = LM.distill_lm_students(key, params, cfg, parts, batches,
+                                      steps=3)
+    assert len(students) == 2
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    portions = [LM.student_portion(st, toks) for st in students]
+    agg = jnp.concatenate(portions, axis=-1)
+    assert agg.shape == (2, 16, cfg.d_model)
+    assert np.isfinite(np.asarray(agg)).all()
+    # portion dims match the partition sizes
+    for st, p in zip(students, parts):
+        assert st.proj.shape[1] == len(p)

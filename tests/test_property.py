@@ -1,0 +1,165 @@
+"""Hypothesis property-based tests on system invariants."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import assignment as ASG
+from repro.core import grouping as GRP
+from repro.core import ncut as NC
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.optim.compression import (CompressionConfig, compress_grads,
+                                     init_state)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# -- grouping invariants -------------------------------------------------------
+
+@given(n=st.integers(2, 16), d_th=st.floats(0.05, 5.0),
+       p_th=st.floats(0.01, 0.9), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_grouping_partitions_devices(n, d_th, p_th, seed):
+    fleet = SIM.make_fleet(n, seed=seed)
+    g = GRP.follow_the_leader(fleet, d_th=d_th, p_th=p_th)
+    names = [d.name for grp in g.groups for d in grp]
+    assert sorted(names) == sorted(d.name for d in fleet)   # cover + disjoint
+    assert all(len(grp) >= 1 for grp in g.groups)
+
+
+# -- ncut invariants ------------------------------------------------------------
+
+@given(m=st.integers(4, 40), k=st.integers(1, 8), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_ncut_is_a_partition(m, k, seed):
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.normal(size=(m, m)))
+    A = 0.5 * (A + A.T)
+    np.fill_diagonal(A, 0)
+    parts = NC.ncut_partition(A, k, seed=seed)
+    allidx = np.concatenate([p for p in parts if len(p)]) if parts else []
+    assert sorted(np.asarray(allidx).tolist()) == list(range(m))
+    assert len(parts) == min(k, m)
+
+
+# -- hungarian optimality --------------------------------------------------------
+
+@given(n=st.integers(2, 5), seed=st.integers(0, 200))
+@settings(**SETTINGS)
+def test_hungarian_is_optimal(n, seed):
+    rng = np.random.default_rng(seed)
+    W = rng.random((n, n))
+    cols = ASG.hungarian(W)
+    got = W[np.arange(n), cols].sum()
+    best = max(sum(W[i, p[i]] for i in range(n))
+               for p in itertools.permutations(range(n)))
+    assert got >= best - 1e-9
+
+
+# -- planner invariants -----------------------------------------------------------
+
+@given(n=st.integers(3, 10), m=st.integers(8, 32),
+       p_th=st.floats(0.05, 0.8), seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_plan_constraints(n, m, p_th, seed):
+    fleet = SIM.make_fleet(n, seed=seed)
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.normal(size=(m, m)))
+    A = 0.5 * (A + A.T)
+    np.fill_diagonal(A, 0)
+    students = [
+        StudentArch("s", 5e6, 0.6e6, 64, 0.15e6),
+        StudentArch("m", 2e7, 1.5e6, 64, 0.4e6),
+        StudentArch("l", 5e7, 3.5e6, 64, 1.2e6),
+    ]
+    plan = PL.make_plan(fleet, A, students, d_th=1.0, p_th=p_th, seed=seed)
+    # (1c)+(1e): filters partitioned
+    filt = np.concatenate([g.filters for g in plan.groups]) \
+        if plan.groups else np.array([])
+    assert sorted(filt.tolist()) == list(range(m))
+    # (1d): device appears at most once
+    devs = [d.name for g in plan.groups for d in g.devices]
+    assert len(devs) == len(set(devs))
+    # (1g): chosen students fit the min memory of their group
+    for g in plan.groups:
+        if g.student is not None:
+            assert g.student.params <= min(d.c_mem for d in g.devices) + 1e-9
+
+
+# -- compression error feedback ----------------------------------------------------
+
+@given(scheme=st.sampled_from(["topk", "int8"]),
+       seed=st.integers(0, 50), n=st.integers(8, 200))
+@settings(**SETTINGS)
+def test_error_feedback_conserves_signal(scheme, seed, n):
+    """compressed + new_residual == grad + old_residual (no signal loss)."""
+    cfg = CompressionConfig(scheme=scheme, topk_ratio=0.1, seed=seed)
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+    state = init_state(cfg, g)
+    comp, state2 = compress_grads(cfg, g, state)
+    lhs = np.asarray(comp["w"]) + np.asarray(state2.residual["w"])
+    rhs = np.asarray(g["w"])  # old residual was zero
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_topk_keeps_largest(seed):
+    cfg = CompressionConfig(scheme="topk", topk_ratio=0.25, seed=seed)
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(100,)), jnp.float32)}
+    comp, _ = compress_grads(cfg, g, init_state(cfg, g))
+    c = np.asarray(comp["w"])
+    nz = np.nonzero(c)[0]
+    assert 0 < len(nz) <= 26
+    # kept entries are the largest-magnitude ones
+    thresh = np.sort(np.abs(np.asarray(g["w"])))[-len(nz)]
+    assert (np.abs(np.asarray(g["w"]))[nz] >= thresh - 1e-9).all()
+
+
+# -- simulator monotonicity -----------------------------------------------------------
+
+@given(crash=st.floats(0.0, 0.6), seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_more_crashes_never_help_coverage(crash, seed):
+    fleet = [Device(f"d{i}", 1e7, 2e6, 500, 0.1) for i in range(6)]
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.normal(size=(12, 12)))
+    A = 0.5 * (A + A.T); np.fill_diagonal(A, 0)
+    students = [StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)]
+    plan = PL.make_plan(fleet, A, students, d_th=10.0, p_th=0.5, seed=seed)
+    lo = SIM.simulate(plan, trials=60, seed=seed,
+                      failure=SIM.FailureModel(crash_prob=crash))
+    hi = SIM.simulate(plan, trials=60, seed=seed,
+                      failure=SIM.FailureModel(crash_prob=min(crash + 0.3, 0.95)))
+    assert hi["mean_coverage"] <= lo["mean_coverage"] + 0.08  # noise slack
+
+
+# -- model invariants --------------------------------------------------------------
+
+@given(b=st.integers(1, 3), s=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 10))
+@settings(max_examples=8, deadline=None)
+def test_causal_lm_is_causal(b, s, seed):
+    """Changing future tokens must not change past logits."""
+    from repro.configs.archs import tiny_version
+    from repro.configs.base import get_config
+    from repro.models import api
+    cfg = tiny_version(get_config("tinyllama-1.1b"))
+    params = api.init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(b, s))
+    toks2 = toks.copy()
+    toks2[:, s // 2:] = rng.integers(0, cfg.vocab, size=(b, s - s // 2))
+    l1 = api.forward(params, cfg, {"tokens": jnp.asarray(toks)})
+    l2 = api.forward(params, cfg, {"tokens": jnp.asarray(toks2)})
+    np.testing.assert_allclose(np.asarray(l1[:, :s // 2], np.float32),
+                               np.asarray(l2[:, :s // 2], np.float32),
+                               atol=1e-4, rtol=1e-4)
