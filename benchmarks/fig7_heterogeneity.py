@@ -31,7 +31,9 @@ def main() -> None:
             "nonn": PL.plan_nonn(fleet, A, students),
         }
         for name, plan in plans.items():
-            res = SIM.simulate(plan, trials=100, seed=0)
+            # 2000 trials is a single vectorized pass — 20× the seed's trial
+            # count at a fraction of its wall time
+            res = SIM.simulate(plan, trials=2000, seed=0)
             emit(f"fig7/level{level}/{name}", 0.0,
                  f"latency={res['mean_latency']:.3f}")
 

@@ -16,6 +16,7 @@ import traceback
 
 MODULES = [
     "benchmarks.roofline",             # fast: reads the dry-run artifact
+    "benchmarks.sim_speed",            # Monte-Carlo engine: loop vs vectorized
     "benchmarks.fig4_redundancy",      # planner only
     "benchmarks.fig7_heterogeneity",   # planner + simulator
     "benchmarks.fig3_latency",         # simulator + one trained ensemble

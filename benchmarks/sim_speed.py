@@ -1,0 +1,78 @@
+"""Monte-Carlo engine speed: vectorized `simulate` vs the seed per-trial
+loop (`simulate_loop`) on the paper's 8-device fleet, plus the new failure
+scenarios at full 10k-trial resolution.
+
+Emits a `speedup=` row — the acceptance gate is ≥ 20× at 10k trials — and
+asserts the two engines agree bit-for-bit at the fixed seed (the default
+FailureModel draw count is shape-deterministic, so the streams align)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.scenarios import (CorrelatedFailures, MarkovLinkScenario,
+                                  StragglerScenario)
+
+TRIALS = 10_000
+
+
+def _setup(n_devices: int):
+    rng = np.random.default_rng(0)
+    a = np.abs(rng.normal(size=(128, 64)))
+    A = (a.T @ a) * np.abs(a.mean(0)[:, None] - a.mean(0)[None, :])
+    np.fill_diagonal(A, 0)
+    A = 0.5 * (A + A.T)
+    students = [
+        StudentArch("small", 5e6, 0.6e6, 64, 0.15e6),
+        StudentArch("mid", 2e7, 1.5e6, 64, 0.4e6),
+        StudentArch("big", 5e7, 3.5e6, 64, 1.2e6),
+    ]
+    fleet = SIM.make_fleet(n_devices, seed=2)
+    return fleet, PL.tune_d_th(fleet, A, students, p_th=0.25)
+
+
+def main() -> None:
+    for n_devices in (8, 16):
+        fleet, plan = _setup(n_devices)
+        fm = SIM.FailureModel()
+
+        t0 = time.perf_counter()
+        loop = SIM.simulate_loop(plan, trials=TRIALS, seed=0, failure=fm)
+        t_loop = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        vec = SIM.simulate(plan, trials=TRIALS, seed=0, failure=fm)
+        t_vec = time.perf_counter() - t0
+
+        assert vec == loop, (vec, loop)   # bit-for-bit at the fixed seed
+        emit(f"simspeed/dev{n_devices}/loop", t_loop * 1e6,
+             f"mean_latency={loop['mean_latency']:.4f}")
+        emit(f"simspeed/dev{n_devices}/vectorized", t_vec * 1e6,
+             f"mean_latency={vec['mean_latency']:.4f};"
+             f"speedup={t_loop / t_vec:.1f}x")
+
+    # scenario sweeps only the vectorized engine can afford at 10k trials
+    fleet, plan = _setup(8)
+    names = [d.name for d in fleet]
+    scenarios = {
+        "correlated": CorrelatedFailures(
+            domains={"rack0": names[:4], "rack1": names[4:]},
+            domain_fail_prob=0.1),
+        "straggler": StragglerScenario(deadline=5.0),
+        "flapping": MarkovLinkScenario(p_fail=0.05, p_recover=0.3),
+    }
+    for name, sc in scenarios.items():
+        t0 = time.perf_counter()
+        res = SIM.simulate(plan, trials=TRIALS, seed=0, failure=sc)
+        emit(f"simspeed/scenario/{name}", (time.perf_counter() - t0) * 1e6,
+             f"coverage={res['mean_coverage']:.4f};"
+             f"complete={res['complete_rate']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pipeline import build_rocoin, profile_student
-from repro.core.simulator import FailureModel, make_fleet
+from repro.core.scenarios import MarkovLinkScenario, ScheduledScenario
+from repro.core.simulator import FailureModel, make_fleet, simulate
 from repro.data.images import ImageTaskConfig, SyntheticImages
 from repro.runtime.failures import FailureEvent, FailureInjector, replan, remap_students
 from repro.runtime.serving import server_from_ensemble
@@ -34,16 +35,25 @@ def main():
 
     x, y = data.batch(32, 999)
     xj = jnp.asarray(x)
-    for req in range(10):
-        down = injector.tick()
-        srv = server_from_ensemble(
-            ens, failure=FailureModel(forced_failures=sorted(down),
-                                      outages=False), seed=req)
-        res = srv.serve(xj)
+    # ONE server; the chaos schedule drives per-request failures, and all 10
+    # requests are served in a single batch: one jit'd forward per partition,
+    # one fused quorum_aggregate launch.
+    srv = server_from_ensemble(ens, seed=0)
+    srv.failure = ScheduledScenario(injector)
+    for req, res in enumerate(srv.serve_batch([xj] * 10)):
         acc = float((res.logits.argmax(-1) == y).mean())
-        print(f"req {req}: down={sorted(down) or '-'} acc={acc:.3f} "
-              f"degraded={res.degraded} "
+        print(f"req {req}: down={sorted(res.failed_devices) or '-'} "
+              f"acc={acc:.3f} degraded={res.degraded} "
               f"portions={int(res.arrived.sum())}/{ens.plan.K}")
+
+    # what-if: how would this plan fare under flapping radio links?
+    flap = simulate(ens.plan, trials=10_000, seed=0,
+                    failure=MarkovLinkScenario(
+                        p_fail=0.1, p_recover=0.4,
+                        base=FailureModel(outages=False)))
+    print(f"\n10k-trial Markov-flapping sweep: "
+          f"coverage={flap['mean_coverage']:.3f} "
+          f"complete={flap['complete_rate']:.3f}")
 
     # permanent loss → elastic re-plan on survivors
     print("\ndevice d0 lost permanently; re-planning on survivors...")

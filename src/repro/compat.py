@@ -1,0 +1,42 @@
+"""jax version-compat helpers (non-Pallas; kernels use kernels/compat.py).
+
+Pinned CI runs one jax, developer machines another — these helpers absorb the
+API moves between the 0.4.x and 0.5.x lines:
+
+  - ``shard_map``: promoted from ``jax.experimental.shard_map`` to
+    ``jax.shard_map``, with the ``check_rep`` kwarg renamed ``check_vma``.
+  - ``AbstractMesh``: constructor changed from ``((name, size), ...)`` pairs
+    to separate shape/axis-name tuples.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: Optional[bool] = None):
+    """Dispatch to whichever shard_map the installed jax exposes.
+
+    ``check`` maps to ``check_vma`` (new) / ``check_rep`` (old); None keeps
+    the library default.
+    """
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        if check is not None:
+            kw["check_vma"] = check
+        return fn(f, **kw)
+    from jax.experimental.shard_map import shard_map as fn
+    if check is not None:
+        kw["check_rep"] = check
+    return fn(f, **kw)
+
+
+def abstract_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """Build a ``jax.sharding.AbstractMesh`` under either constructor."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, shape)))

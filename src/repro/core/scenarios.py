@@ -1,0 +1,133 @@
+"""Pluggable failure scenarios for the vectorized Monte-Carlo engine.
+
+The seed simulator modelled only independent crashes + Rayleigh outages
+(:class:`repro.core.simulator.FailureModel`). Real edge fleets fail in
+richer ways — CoCoI-style stragglers, rack/power-domain blackouts, flapping
+radio links — and covering them is tractable now that trials are a single
+matrix pass. Every scenario exposes
+
+    sample(rng, arrays: PlanArrays, trials) -> (alive (T, D) bool,
+                                                delay  (T, D) float | None)
+
+plus an optional ``deadline`` attribute (trials whose per-device latency
+``t + delay`` exceeds it count as missed). :func:`repro.core.simulator.simulate`
+and the batched quorum server consume scenarios interchangeably with the
+plain ``FailureModel``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.simulator import FailureModel, PlanArrays
+
+
+@dataclasses.dataclass
+class CorrelatedFailures:
+    """Correlated group failures: devices share failure domains (a power rail,
+    a rack switch, a cell tower). Each domain blacks out independently with
+    ``domain_fail_prob`` per trial, killing EVERY member at once; survivors
+    still face the base model's independent crash/outage draws.
+
+    `domains` maps domain name → member device names; devices absent from
+    every domain only see the base model."""
+    domains: Dict[str, Sequence[str]]
+    domain_fail_prob: float = 0.1
+    base: FailureModel = dataclasses.field(default_factory=FailureModel)
+    deadline: Optional[float] = None
+
+    def sample(self, rng: np.random.Generator, arrays: PlanArrays,
+               trials: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        names = list(self.domains)
+        down = rng.random((trials, len(names))) < self.domain_fail_prob
+        member = np.zeros((len(names), len(arrays.names)), bool)
+        for gi, g in enumerate(names):
+            members = set(self.domains[g])
+            member[gi] = [n in members for n in arrays.names]
+        domain_dead = down @ member                  # (T, D) via bool matmul
+        alive, delay = self.base.sample(rng, arrays, trials)
+        return alive & ~domain_dead, delay
+
+
+@dataclasses.dataclass
+class StragglerScenario:
+    """Straggler delay with a deadline timeout: every live device's Eq. 1a
+    latency is inflated by a random slowdown (queueing, thermal throttling,
+    contention). ``dist`` is ``"lognormal"`` (heavy tail, CoCoI's empirical
+    fit) or ``"exponential"``; ``scale`` multiplies the plan's median Eq. 1a
+    latency so the knob is fleet-independent. Devices past ``deadline`` miss
+    the quorum — replication is what masks them."""
+    dist: str = "lognormal"
+    sigma: float = 1.0               # lognormal shape
+    scale: float = 0.5               # delay scale, × median plan latency
+    deadline: Optional[float] = None
+    base: FailureModel = dataclasses.field(default_factory=FailureModel)
+
+    def sample(self, rng: np.random.Generator, arrays: PlanArrays,
+               trials: int) -> Tuple[np.ndarray, np.ndarray]:
+        alive, _ = self.base.sample(rng, arrays, trials)
+        D = len(arrays.names)
+        unit = self.scale * float(np.median(arrays.t)) if D else 0.0
+        if self.dist == "lognormal":
+            delay = unit * rng.lognormal(mean=0.0, sigma=self.sigma,
+                                         size=(trials, D))
+        elif self.dist == "exponential":
+            delay = unit * rng.exponential(scale=1.0, size=(trials, D))
+        else:
+            raise ValueError(f"unknown straggler dist {self.dist!r}")
+        return alive, delay
+
+
+@dataclasses.dataclass
+class MarkovLinkScenario:
+    """Markov link flapping: each device's uplink is a two-state Gilbert
+    chain advanced once per trial (up → down w.p. ``p_fail``, down → up
+    w.p. ``p_recover``). The chain is realized as a
+    :class:`repro.runtime.failures.FailureInjector` schedule — the same event
+    stream drives chaos-testing of the live serving loop — and replayed into
+    the (T, D) aliveness matrix. Devices with a down link still obey the base
+    model's crash/outage draws while up."""
+    p_fail: float = 0.05
+    p_recover: float = 0.3
+    base: FailureModel = dataclasses.field(default_factory=FailureModel)
+    deadline: Optional[float] = None
+
+    def schedule(self, rng: np.random.Generator, names: Sequence[str],
+                 trials: int):
+        from repro.runtime.failures import markov_flap_schedule
+        return markov_flap_schedule(names, self.p_fail, self.p_recover,
+                                    trials, rng)
+
+    def sample(self, rng: np.random.Generator, arrays: PlanArrays,
+               trials: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        from repro.runtime.failures import FailureInjector
+        events = self.schedule(rng, arrays.names, trials)
+        up = FailureInjector(events).alive_matrix(arrays.names, trials)
+        alive, delay = self.base.sample(rng, arrays, trials)
+        return alive & up, delay
+
+
+@dataclasses.dataclass
+class ScheduledScenario:
+    """Deterministic replay of a :class:`FailureInjector` event schedule
+    (trial/request index = injector tick) — the bridge between chaos-test
+    scripts and Monte-Carlo sweeps. Each ``sample`` consumes its window of
+    ticks, so sequential ``serve``/``serve_batch`` calls CONTINUE the script
+    exactly like the per-request ``tick()`` flow (request 6 of two 5-request
+    batches sees tick 6, not tick 1). Optionally composes with a stochastic
+    base model."""
+    injector: "object"               # repro.runtime.failures.FailureInjector
+    base: Optional[FailureModel] = None
+    deadline: Optional[float] = None
+
+    def sample(self, rng: np.random.Generator, arrays: PlanArrays,
+               trials: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        start = getattr(self.injector, "_count", 0)
+        up = self.injector.alive_matrix(arrays.names, trials, start=start)
+        self.injector.advance(trials)
+        if self.base is None:
+            return up, None
+        alive, delay = self.base.sample(rng, arrays, trials)
+        return alive & up, delay

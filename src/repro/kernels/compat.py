@@ -1,0 +1,23 @@
+"""Pallas/Mosaic version-compat layer.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back,
+across the 0.4.x → 0.5.x line). Kernels import :data:`CompilerParams` from
+here so the same source compiles against any installed jax; the resolved
+class is the one the installed ``pallas_call`` actually accepts.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs) -> "CompilerParams":
+    """Build compiler params, dropping kwargs the installed class rejects."""
+    try:
+        return CompilerParams(**kwargs)
+    except TypeError:
+        fields = getattr(CompilerParams, "__dataclass_fields__", {})
+        return CompilerParams(**{k: v for k, v in kwargs.items()
+                                 if k in fields})

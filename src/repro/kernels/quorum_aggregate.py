@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import compiler_params
+
 
 def _agg_kernel(mask_ref, p_ref, w_ref, b_ref, o_ref, acc_ref, *, K: int):
     k = pl.program_id(1)
@@ -71,7 +73,7 @@ def quorum_aggregate(portions: jnp.ndarray, weights: jnp.ndarray,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((portions.shape[1], C), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(mask, jnp.int32), portions, weights, bias)

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
                    stage_params: Any, x: jnp.ndarray, *, mesh: Mesh,
@@ -67,11 +69,11 @@ def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
         return outs
 
     xs = x.reshape(M, mb, *x.shape[1:])
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P()),      # params stage-sharded, data replicated
         out_specs=P(),
-        check_vma=False)
+        check=False)
     outs = fn(stage_params, xs)
     return outs.reshape(B, *x.shape[1:])
 

@@ -40,6 +40,57 @@ class FailureInjector:
         self._count += 1
         return set(self._down)
 
+    def alive_matrix(self, names: Sequence[str], ticks: int,
+                     start: int = 0) -> np.ndarray:
+        """Replay the schedule for ticks [start, start+ticks) at once:
+        (ticks, len(names)) bool, True while the device is up. O(#events)
+        fills instead of O(ticks·devices) scanning — the vectorized
+        simulator's view of a chaos script. Devices already down at the
+        window start (an event at_request ≤ start) start down."""
+        col = {n: i for i, n in enumerate(names)}
+        alive = np.ones((start + ticks, len(names)), bool)
+        for e in sorted(self.events, key=lambda e: e.at_request):
+            if e.device not in col:
+                continue
+            first = max(e.at_request, 0)
+            if first >= start + ticks:
+                continue
+            alive[first:, col[e.device]] = (e.kind != "crash")
+        return alive[start:]
+
+    def advance(self, n: int) -> None:
+        """Consume `n` ticks without querying them (applies any events in the
+        window so a later tick() continues from consistent state)."""
+        for e in self.events:
+            if self._count <= e.at_request < self._count + n:
+                if e.kind == "crash":
+                    self._down.add(e.device)
+                else:
+                    self._down.discard(e.device)
+        self._count += n
+
+
+def markov_flap_schedule(names: Sequence[str], p_fail: float,
+                         p_recover: float, ticks: int,
+                         rng: np.random.Generator) -> List[FailureEvent]:
+    """Sample a Gilbert two-state link chain per device (up → down w.p.
+    `p_fail`, down → up w.p. `p_recover`, all links start up) and emit the
+    transitions as a FailureEvent schedule. The loop is over ticks only —
+    every device's transition draw at a tick is one vectorized RNG call."""
+    n = len(names)
+    up = np.ones(n, bool)
+    events: List[FailureEvent] = []
+    u = rng.random((ticks, n))
+    for t in range(ticks):
+        go_down = up & (u[t] < p_fail)
+        go_up = ~up & (u[t] < p_recover)
+        for i in np.flatnonzero(go_down):
+            events.append(FailureEvent(t, names[i], "crash"))
+        for i in np.flatnonzero(go_up):
+            events.append(FailureEvent(t, names[i], "recover"))
+        up = (up & ~go_down) | go_up
+    return events
+
 
 def replan(devices: Sequence[Device], A: np.ndarray,
            students: Sequence[StudentArch], *, d_th: Optional[float],

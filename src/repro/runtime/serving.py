@@ -17,6 +17,15 @@ The source node:
 Latency accounting uses the paper's Eq. 1a device model; the actual portion
 math runs as real JAX computation, and the merge uses the fused Pallas
 quorum_aggregate kernel.
+
+Hot path: portion functions are jit-compiled ONCE per server (first call per
+input shape) and reused across requests, and :meth:`QuorumServer.serve_batch`
+stacks R requests into a single forward per partition + ONE fused
+quorum_aggregate launch for the whole batch. Per-request failure draws come
+from the same vectorized sampler as the Monte-Carlo engine; a request whose
+partition k missed quorum has its rows of portion k zeroed before the merge —
+bit-identical to a per-request mask because the merge is linear in each
+portion.
 """
 from __future__ import annotations
 
@@ -29,7 +38,7 @@ import numpy as np
 
 from repro.core.grouping import Device
 from repro.core.planner import Plan
-from repro.core.simulator import FailureModel
+from repro.core.simulator import FailureModel, plan_arrays, reduce_trials
 from repro.kernels import ops as K
 
 
@@ -49,50 +58,88 @@ class QuorumServer:
     fc_weights: jnp.ndarray       # (K, Dk, C) padded per-partition FC slices
     fc_bias: jnp.ndarray          # (C,)
     deadline: float = float("inf")
-    failure: FailureModel = dataclasses.field(default_factory=FailureModel)
+    failure: Any = dataclasses.field(default_factory=FailureModel)
     rng: np.random.Generator = dataclasses.field(
         default_factory=lambda: np.random.default_rng(0))
+    _jitted: Optional[List[Callable]] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _arrays: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False)
 
-    def _replica_latencies(self, g) -> List[Tuple[str, float, bool]]:
-        out = []
-        for d in g.devices:
-            alive = self.failure.device_alive(self.rng, d)
-            t = (g.student.flops / d.c_core + 8.0 * g.student.out_bytes / d.r_tran
-                 if g.student else float("inf"))
-            out.append((d.name, t, alive))
-        return out
+    # -- compiled state ------------------------------------------------------
+
+    @property
+    def jitted_portions(self) -> List[Callable]:
+        """Portion forwards, jit'd once and reused for every request."""
+        if self._jitted is None:
+            self._jitted = [jax.jit(fn) for fn in self.portion_fns]
+        return self._jitted
+
+    @property
+    def arrays(self):
+        """Cached PlanArrays view of the plan (rebuilt after remove_device)."""
+        if self._arrays is None:
+            self._arrays = plan_arrays(self.plan)
+        return self._arrays
+
+    # -- serving -------------------------------------------------------------
 
     def serve(self, x: jnp.ndarray) -> ServeResult:
+        return self.serve_batch([x])[0]
+
+    def serve_batch(self, xs: Sequence[jnp.ndarray]) -> List[ServeResult]:
+        """Serve R stacked requests with ONE portion forward per partition and
+        ONE quorum_aggregate launch. Failures are drawn per request (one
+        vectorized sample for the whole batch)."""
+        R = len(xs)
+        if R == 0:
+            return []
+        arrays = self.arrays
         Kp = self.plan.K
-        arrived = np.zeros(Kp, bool)
-        lat = np.full(Kp, np.inf)
-        failed: List[str] = []
-        for slot, g in enumerate(self.plan.groups):
-            for name, t, alive in self._replica_latencies(g):
-                if not alive:
-                    failed.append(name)
-                    continue
-                if t <= self.deadline:
-                    lat[slot] = min(lat[slot], t)
-                    arrived[slot] = True
-        # compute arrived portions (real JAX math)
+        sizes = [int(x.shape[0]) for x in xs]
+        offs = np.concatenate([[0], np.cumsum(sizes)])
+        x_all = xs[0] if R == 1 else jnp.concatenate(list(xs), axis=0)
+        B = int(offs[-1])
+
+        alive, delay = self.failure.sample(self.rng, arrays, R)
+        deadline = getattr(self.failure, "deadline", None)
+        if deadline is None:
+            deadline = self.deadline
+        _, arrived, latency = reduce_trials(arrays, alive, delay, deadline)
+
+        # per-sample row mask: request r's rows of portion k are zeroed when
+        # k missed r's quorum (linear merge ⇒ exact per-request masking)
+        row_arrived = np.repeat(arrived, sizes, axis=0)     # (B, K)
+        any_arrived = arrived.any(axis=0)                   # (K,)
+
         Dk = self.fc_weights.shape[1]
         portions = []
-        B = x.shape[0]
         for kslot in range(Kp):
-            if arrived[kslot]:
-                p = self.portion_fns[kslot](x)
-                if p.shape[-1] < Dk:          # pad to the uniform width
-                    p = jnp.pad(p, ((0, 0), (0, Dk - p.shape[-1])))
-                portions.append(p)
-            else:
+            if not any_arrived[kslot]:
                 portions.append(jnp.zeros((B, Dk), jnp.float32))
+                continue
+            p = self.jitted_portions[kslot](x_all)
+            if p.shape[-1] < Dk:          # pad to the uniform width
+                p = jnp.pad(p, ((0, 0), (0, Dk - p.shape[-1])))
+            if not row_arrived[:, kslot].all():
+                p = p * jnp.asarray(row_arrived[:, kslot, None], p.dtype)
+            portions.append(p)
         stacked = jnp.stack(portions)          # (K, B, Dk)
-        logits = K.quorum_aggregate(stacked, self.fc_weights, self.fc_bias,
-                                    jnp.asarray(arrived, jnp.int32))
-        latency = float(lat[arrived].max()) if arrived.any() else float("inf")
-        return ServeResult(np.asarray(logits), latency, arrived,
-                           degraded=not arrived.all(), failed_devices=failed)
+        logits = np.asarray(K.quorum_aggregate(
+            stacked, self.fc_weights, self.fc_bias,
+            jnp.asarray(any_arrived, jnp.int32)))
+
+        results = []
+        for r in range(R):
+            failed = [arrays.names[j] for j in np.flatnonzero(~alive[r])]
+            results.append(ServeResult(
+                logits=logits[offs[r]:offs[r + 1]],
+                latency=float(latency[r]),
+                arrived=arrived[r],
+                degraded=not arrived[r].all(),
+                failed_devices=failed,
+            ))
+        return results
 
     # -- elastic re-planning -------------------------------------------------
 
@@ -101,6 +148,7 @@ class QuorumServer:
         but will always miss quorum until replan_on() is called."""
         for g in self.plan.groups:
             g.devices = [d for d in g.devices if d.name != name]
+        self._arrays = None
 
     def live_devices(self) -> List[Device]:
         return [d for g in self.plan.groups for d in g.devices]

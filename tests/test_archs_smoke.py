@@ -40,6 +40,7 @@ def test_forward_shapes_no_nans(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
+@pytest.mark.slow                 # value_and_grad compile per arch
 @pytest.mark.parametrize("arch", ARCHS)
 def test_one_train_step(arch):
     cfg = tiny_version(all_archs()[arch])
@@ -66,6 +67,7 @@ def test_decode_step(arch):
     assert jax.tree.structure(cache) == jax.tree.structure(cache2)
 
 
+@pytest.mark.slow                 # compiles prefill + per-token decode
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-130m",
                                   "jamba-v0.1-52b", "whisper-medium"])
 def test_prefill_matches_decode(arch):

@@ -6,6 +6,8 @@ import pytest
 
 from repro.core import distill as DS
 
+pytestmark = pytest.mark.slow     # distillation training loops
+
 
 def test_at_loss_zero_for_identical():
     f = jax.random.normal(jax.random.key(0), (4, 16))

@@ -3,6 +3,7 @@ channels, distill student LMs, aggregate portions (DESIGN.md §5)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.archs import tiny_version
 from repro.configs.base import get_config
@@ -10,6 +11,8 @@ from repro.core import lm_students as LM
 from repro.core import ncut as NC
 from repro.core.simulator import make_fleet
 from repro.models import api
+
+pytestmark = pytest.mark.slow     # LM distillation training loops
 
 
 def _teacher():

@@ -1,0 +1,291 @@
+"""Vectorized Monte-Carlo engine: fixed-seed equivalence against the seed
+per-trial implementation, plus unit coverage for each failure scenario
+(correlated domains, straggler deadlines, Markov link flapping) and the
+batched quorum server."""
+import numpy as np
+import pytest
+
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.scenarios import (CorrelatedFailures, MarkovLinkScenario,
+                                  ScheduledScenario, StragglerScenario)
+from repro.core.simulator import FailureModel
+from repro.runtime.failures import (FailureEvent, FailureInjector,
+                                    markov_flap_schedule)
+
+
+def _graph(m=24, seed=0):
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.normal(size=(m, m)))
+    A = 0.5 * (A + A.T)
+    np.fill_diagonal(A, 0)
+    return A
+
+
+def _students():
+    return [
+        StudentArch("small", flops=5e6, params=0.6e6, out_bytes=64, capacity=0.15e6),
+        StudentArch("mid", flops=2e7, params=1.5e6, out_bytes=64, capacity=0.4e6),
+        StudentArch("big", flops=5e7, params=3.5e6, out_bytes=64, capacity=1.2e6),
+    ]
+
+
+def _plan(n=8, seed=2, d_th=2.0, p_th=0.3):
+    fleet = SIM.make_fleet(n, seed=seed)
+    return PL.make_plan(fleet, _graph(), _students(), d_th=d_th, p_th=p_th)
+
+
+# -- fixed-seed equivalence vs the seed per-trial loop ------------------------
+
+@pytest.mark.parametrize("failure", [
+    FailureModel(),                                        # Rayleigh outages
+    FailureModel(outages=False),                           # deterministic
+    FailureModel(forced_failures=["d0", "d3"]),            # forced downs
+    FailureModel(crash_prob=0.3, outages=False),           # crashes only
+], ids=["outages", "none", "forced", "crash"])
+def test_vectorized_matches_loop_bitforbit(failure):
+    """Whenever the legacy RNG draw count is shape-deterministic, the
+    vectorized engine consumes the stream identically → results are
+    bit-for-bit equal at a fixed seed."""
+    plan = _plan()
+    for seed in (0, 7, 42):
+        vec = SIM.simulate(plan, trials=300, seed=seed, failure=failure)
+        loop = SIM.simulate(plan, trials=300, seed=seed, failure=failure,
+                            engine="loop")
+        assert vec == loop
+
+
+def test_vectorized_matches_loop_statistically_crash_and_outage():
+    """crash_prob > 0 with outages makes the legacy draw count data-dependent
+    (crashed devices skip their outage draw), so the vectorized sampler uses
+    a decoupled two-matrix protocol: identical distribution, different
+    stream layout. Check agreement at Monte-Carlo resolution."""
+    plan = _plan()
+    failure = FailureModel(crash_prob=0.2)
+    vec = SIM.simulate(plan, trials=20_000, seed=0, failure=failure)
+    loop = SIM.simulate(plan, trials=20_000, seed=1, failure=failure,
+                        engine="loop")
+    assert abs(vec["mean_coverage"] - loop["mean_coverage"]) < 0.02
+    assert abs(vec["complete_rate"] - loop["complete_rate"]) < 0.02
+    assert abs(vec["mean_latency"] - loop["mean_latency"]) < 0.05
+
+
+def test_accuracy_under_failures_matches_seed_loop():
+    plan = _plan()
+
+    def acc_fn(arrived):
+        return float(arrived.mean() * 0.9 + 0.05)
+
+    got = SIM.accuracy_under_failures(plan, acc_fn, n_failed=3, trials=50,
+                                      seed=5)
+    # the seed implementation, inlined as the oracle
+    rng = np.random.default_rng(5)
+    all_devices = [d.name for g in plan.groups for d in g.devices]
+    accs = []
+    for _ in range(50):
+        down = set(rng.choice(all_devices, size=min(3, len(all_devices)),
+                              replace=False))
+        arrived = np.zeros(plan.K, bool)
+        for slot, g in enumerate(plan.groups):
+            arrived[slot] = any(d.name not in down for d in g.devices)
+        accs.append(acc_fn(arrived))
+    assert got == float(np.mean(accs))
+
+
+def test_simulate_trial_shim_unchanged():
+    plan = _plan()
+    rng = np.random.default_rng(3)
+    r = SIM.simulate_trial(plan, rng, FailureModel())
+    assert r.arrived.shape == (plan.K,)
+    assert r.coverage == float(r.arrived.mean())
+    assert np.isfinite(r.latency) or not r.arrived.any()
+
+
+# -- failure scenarios --------------------------------------------------------
+
+def _reliable_plan():
+    fleet = [Device(f"d{i}", 1e7, 2e6, 500, 0.0) for i in range(8)]
+    return PL.make_plan(fleet, _graph(16), _students(), d_th=10.0, p_th=1.0)
+
+
+def test_correlated_domain_blackout_kills_all_members():
+    plan = _reliable_plan()
+    names = [d.name for g in plan.groups for d in g.devices]
+    sc = CorrelatedFailures(domains={"all": names}, domain_fail_prob=1.0,
+                            base=FailureModel(outages=False))
+    res = SIM.simulate(plan, trials=50, seed=0, failure=sc)
+    assert res["mean_coverage"] == 0.0
+    assert res["mean_latency"] == float("inf")
+
+
+def test_correlated_partial_domains_match_bernoulli_rate():
+    plan = _reliable_plan()
+    names = [d.name for g in plan.groups for d in g.devices]
+    sc = CorrelatedFailures(domains={"rack": names}, domain_fail_prob=0.25,
+                            base=FailureModel(outages=False))
+    res = SIM.simulate(plan, trials=20_000, seed=1, failure=sc)
+    # whole fleet blacks out together → complete_rate = P(domain up)
+    assert abs(res["complete_rate"] - 0.75) < 0.02
+    assert res["mean_coverage"] == res["complete_rate"]
+
+
+def test_straggler_delay_inflates_latency_and_deadline_drops():
+    plan = _reliable_plan()
+    base = FailureModel(outages=False)
+    clean = SIM.simulate(plan, trials=2000, seed=0, failure=base)
+    slow = SIM.simulate(plan, trials=2000, seed=0,
+                        failure=StragglerScenario(base=base))
+    assert slow["mean_latency"] > clean["mean_latency"]
+    assert slow["complete_rate"] == 1.0          # no deadline → all arrive
+    dl = clean["mean_latency"] * 1.2
+    timed_out = SIM.simulate(plan, trials=2000, seed=0,
+                             failure=StragglerScenario(base=base, deadline=dl))
+    assert timed_out["mean_coverage"] < 1.0      # some replicas miss quorum
+    assert timed_out["mean_latency"] <= dl       # arrivals beat the deadline
+
+
+def test_straggler_rejects_unknown_dist():
+    plan = _reliable_plan()
+    with pytest.raises(ValueError):
+        SIM.simulate(plan, trials=4, seed=0,
+                     failure=StragglerScenario(dist="pareto"))
+
+
+def test_markov_flapping_coverage_between_extremes():
+    plan = _reliable_plan()
+    base = FailureModel(outages=False)
+    never = SIM.simulate(plan, trials=2000, seed=0,
+                         failure=MarkovLinkScenario(p_fail=0.0, base=base))
+    flappy = SIM.simulate(plan, trials=2000, seed=0,
+                          failure=MarkovLinkScenario(p_fail=0.3, p_recover=0.3,
+                                                     base=base))
+    assert never["mean_coverage"] == 1.0
+    assert 0.0 < flappy["mean_coverage"] < 1.0
+
+
+def test_markov_stationary_up_fraction():
+    """Gilbert chain stationary up-probability = p_r / (p_f + p_r)."""
+    rng = np.random.default_rng(0)
+    names = [f"d{i}" for i in range(20)]
+    ev = markov_flap_schedule(names, p_fail=0.1, p_recover=0.3, ticks=5000,
+                              rng=rng)
+    up = FailureInjector(ev).alive_matrix(names, 5000)
+    assert abs(up[1000:].mean() - 0.75) < 0.03
+
+
+def test_injector_alive_matrix_matches_tick_replay():
+    events = [FailureEvent(2, "a"), FailureEvent(4, "b"),
+              FailureEvent(6, "a", "recover"), FailureEvent(6, "c"),
+              FailureEvent(9, "c", "recover")]
+    names = ["a", "b", "c"]
+    mat = FailureInjector(list(events)).alive_matrix(names, 12)
+    inj = FailureInjector(list(events))
+    for t in range(12):
+        down = inj.tick()
+        assert (mat[t] == np.array([n not in down for n in names])).all()
+
+
+def test_scheduled_scenario_replays_chaos_script():
+    plan = _reliable_plan()
+    names = [d.name for g in plan.groups for d in g.devices]
+    inj = FailureInjector([FailureEvent(0, n) for n in names]
+                          + [FailureEvent(5, n, "recover") for n in names])
+    res = SIM.simulate(plan, trials=10, seed=0,
+                       failure=ScheduledScenario(inj))
+    # down for ticks 0–4, up for 5–9 → half the trials complete
+    assert res["complete_rate"] == 0.5
+
+
+def test_scheduled_scenario_sequential_batches_continue_script():
+    """Two 5-request batches must consume ticks 0–4 then 5–9, matching the
+    per-request tick() flow — not restart the chaos script."""
+    plan = _reliable_plan()
+    names = [d.name for g in plan.groups for d in g.devices]
+    inj = FailureInjector([FailureEvent(0, n) for n in names]
+                          + [FailureEvent(5, n, "recover") for n in names])
+    sc = ScheduledScenario(inj)
+    arrays = SIM.plan_arrays(plan)
+    rng = np.random.default_rng(0)
+    first, _ = sc.sample(rng, arrays, 5)     # ticks 0–4: everyone down
+    second, _ = sc.sample(rng, arrays, 5)    # ticks 5–9: everyone up
+    assert not first.any()
+    assert second.all()
+
+
+def test_injector_alive_matrix_start_offset():
+    events = [FailureEvent(2, "a"), FailureEvent(6, "a", "recover")]
+    names = ["a", "b"]
+    full = FailureInjector(list(events)).alive_matrix(names, 10)
+    windowed = FailureInjector(list(events)).alive_matrix(names, 6, start=4)
+    assert (windowed == full[4:10]).all()
+
+
+# -- batched quorum serving ---------------------------------------------------
+
+def _toy_server(failure):
+    import jax.numpy as jnp
+    from repro.runtime.serving import QuorumServer
+    st = StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)
+    groups = [
+        PL.GroupPlan(0, [Device("a", 1e7, 2e6, 500, 0.3),
+                         Device("b", 2e7, 2e6, 500, 0.3)], 0,
+                     np.arange(4), st),
+        PL.GroupPlan(1, [Device("c", 1e7, 2e6, 500, 0.3),
+                         Device("d", 3e7, 2e6, 500, 0.3)], 1,
+                     np.arange(4, 8), st),
+    ]
+    plan = PL.Plan(groups, np.zeros((8, 8)), 1.0, 0.5)
+    Dk, C = 4, 3
+    W = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, Dk, C)).astype(np.float32))
+    b = jnp.asarray(np.arange(C, dtype=np.float32))
+    fns = [lambda x: x @ jnp.ones((x.shape[-1], Dk), jnp.float32),
+           lambda x: x @ (2 * jnp.ones((x.shape[-1], Dk), jnp.float32))]
+    return QuorumServer(plan, fns, W, b, failure=failure)
+
+
+def test_serve_batch_equals_individual_serves():
+    import jax.numpy as jnp
+    srv = _toy_server(FailureModel(outages=False))
+    ref = _toy_server(FailureModel(outages=False))
+    xs = [jnp.asarray(np.random.default_rng(i).normal(
+        size=(3, 5)).astype(np.float32)) for i in range(4)]
+    batch = srv.serve_batch(xs)
+    for x, r in zip(xs, batch):
+        single = ref.serve(x)
+        np.testing.assert_allclose(r.logits, single.logits, atol=1e-6)
+        assert r.latency == single.latency
+        assert (r.arrived == single.arrived).all()
+        assert not r.degraded
+
+
+def test_serve_batch_per_request_degradation():
+    import jax.numpy as jnp
+    srv = _toy_server(FailureModel(forced_failures=["a", "b"], outages=False))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(3, 5)).astype(np.float32))
+    r = srv.serve(x)
+    manual = np.asarray(srv.portion_fns[1](x) @ srv.fc_weights[1]
+                        + srv.fc_bias)
+    np.testing.assert_allclose(r.logits, manual, atol=1e-5)
+    assert r.degraded and list(r.arrived) == [False, True]
+    assert set(r.failed_devices) == {"a", "b"}
+
+
+def test_serve_batch_all_down_is_bias_only():
+    import jax.numpy as jnp
+    srv = _toy_server(FailureModel(forced_failures=["a", "b", "c", "d"]))
+    x = jnp.asarray(np.ones((2, 5), np.float32))
+    r = srv.serve(x)
+    np.testing.assert_allclose(
+        r.logits, np.broadcast_to(np.asarray(srv.fc_bias), (2, 3)), atol=1e-6)
+    assert not np.isfinite(r.latency) and not r.arrived.any()
+
+
+def test_server_jits_portions_once():
+    srv = _toy_server(FailureModel(outages=False))
+    first = srv.jitted_portions
+    assert srv.jitted_portions is first          # compiled once, reused
+    assert len(first) == srv.plan.K

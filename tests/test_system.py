@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow     # end-to-end trainer/serving flows
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
