@@ -39,8 +39,10 @@ def fig3a() -> None:
         for succ in (0.5, 0.6, 0.7, 0.8, 0.9):
             fleet = make_fleet(8, seed=2, success_prob=succ)
             def run():
-                plan = PL.tune_d_th(fleet, A, S, p_th=p_th)
-                return SIM.simulate(plan, trials=100, seed=0)
+                # canonical array-backed path: the simulator consumes the
+                # PlanIR directly, no object-graph round trip
+                ir = PL.tune_d_th_ir(fleet, A, S, p_th=p_th)
+                return SIM.simulate(ir, trials=100, seed=0)
             res, us = timed(run, repeats=1)
             emit(f"fig3a/pth{p_th}/succ{succ}", us,
                  f"latency={res['mean_latency']:.3f};"
@@ -56,7 +58,7 @@ def fig3b() -> None:
             # vectorized engine: trials cost one forward per UNIQUE arrival
             # mask, so 32 Monte-Carlo deletions ≈ the price of the old 5
             acc = SIM.accuracy_under_failures(
-                ens.plan,
+                ens.ir if ens.ir is not None else ens.plan,
                 lambda arrived: ens.accuracy(data, arrived=arrived,
                                              batches=1, batch=128),
                 n_failed, trials=32, seed=0)

@@ -15,9 +15,10 @@ def main() -> None:
         ens = cached_ensemble(planner, p_th=0.25, success_prob=0.7, n_devices=8)
         for n_failed in (0, 1, 2, 4):
             # vectorized engine dedups arrival masks → one eval per unique
-            # mask, so the Monte-Carlo trial count is effectively free
+            # mask, so the Monte-Carlo trial count is effectively free;
+            # failure masks are drawn from the canonical PlanIR
             acc = SIM.accuracy_under_failures(
-                ens.plan,
+                ens.ir if ens.ir is not None else ens.plan,
                 lambda arrived: ens.accuracy(data, arrived=arrived,
                                              batches=1, batch=128),
                 n_failed, trials=32, seed=1)

@@ -23,7 +23,8 @@ def main() -> None:
         for crash in (0.0, 0.25, 0.5):
             # batched quorum serving: ONE portion forward per partition and
             # ONE fused aggregate launch for all 6 Monte-Carlo requests,
-            # failures drawn per request by the vectorized sampler
+            # failures drawn per request by the vectorized sampler; the
+            # server runs on the ensemble's canonical PlanIR
             srv = server_from_ensemble(
                 ens, failure=FailureModel(crash_prob=crash), seed=100)
             results = srv.serve_batch([xj] * 6)

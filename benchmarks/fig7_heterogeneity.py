@@ -24,8 +24,10 @@ def main() -> None:
     ]
     for level in range(6):
         fleet = make_fleet_heterogeneity(level, n=8, seed=3)
+        # RoCoIn runs on the canonical array-backed PlanIR; the baselines'
+        # object plans feed the same simulate() entry point
         plans = {
-            "rocoin": PL.tune_d_th(fleet, A, students, p_th=0.25),
+            "rocoin": PL.tune_d_th_ir(fleet, A, students, p_th=0.25),
             "rocoin-g": PL.plan_rocoin_g(fleet, A, students, d_th=1.0, p_th=0.25),
             "hetnonn": PL.plan_hetnonn(fleet, A, students),
             "nonn": PL.plan_nonn(fleet, A, students),

@@ -1,0 +1,188 @@
+"""Planner scale + online-controller benchmark (PlanIR stack).
+
+Three sections, all ``name,us_per_call,derived`` CSV rows:
+
+  plan_scale/tune/N*        — full vectorized ``tune_d_th_ir`` sweep wall
+                              time at fleet sizes up to 1024 devices,
+  plan_scale/speedup/N*     — vectorized ``make_plan_ir`` vs the object-path
+                              reference (follow-the-leader over Device
+                              objects + per-pair Eq. 5 Python loops),
+  plan_scale/controller/*   — seeded end-to-end ``ClusterController`` +
+                              ``QuorumServer`` run under a
+                              ``markov_flap_schedule``: incremental repair vs
+                              forced full replanning (events, redeployments,
+                              re-jitted portions, wall time, Eq. 1a objective
+                              ratio, quorum restoration).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import assignment as ASG
+from repro.core import grouping as GRP
+from repro.core import ncut as NC
+from repro.core import planner as PL
+from repro.core.assignment import StudentArch
+from repro.core.simulator import FailureModel, make_fleet
+
+
+def _students() -> List[StudentArch]:
+    return [
+        StudentArch("small", 5e6, 0.6e6, 64, 0.15e6),
+        StudentArch("mid", 2e7, 1.5e6, 64, 0.4e6),
+        StudentArch("big", 5e7, 3.5e6, 64, 1.2e6),
+    ]
+
+
+def _graph(M: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = np.abs(rng.normal(size=(2 * M, M)))
+    A = (a.T @ a) * np.abs(a.mean(0)[:, None] - a.mean(0)[None, :])
+    np.fill_diagonal(A, 0)
+    return 0.5 * (A + A.T)
+
+
+def _fleet(n: int, seed: int = 0):
+    # floor the memory range above the smallest student so no device is a
+    # dead weight that can host nothing (the paper's Table-I fleets all fit
+    # at least one student)
+    return make_fleet(n, seed=seed, mem_range=(1.0e6, 4e6))
+
+
+def _object_path_plan(devices, A, students, d_th, p_th, seed=0, repair=False):
+    """The pre-PlanIR reference: object grouping + per-pair Eq. 5 loops."""
+    grouping = GRP.follow_the_leader(devices, d_th, p_th, seed=seed,
+                                     repair=repair)
+    parts = NC.ncut_partition(np.asarray(A), grouping.K, seed=seed)
+    sizes = PL.partition_sizes(A, parts)
+    return ASG.match_groups_to_partitions(
+        [tuple(g) for g in grouping.groups[:len(parts)]], sizes, students)
+
+
+def _object_path_tune(devices, A, students, p_th):
+    """The pre-PlanIR tune_d_th sweep: no partition cache, no grouping memo,
+    per-pair Python Eq. 5 — recomputes identical Ncuts per candidate."""
+    for repair in (False, True):
+        for d_th in np.geomspace(0.05, 4.0, 12):
+            _object_path_plan(devices, A, students, float(d_th), p_th,
+                              repair=repair)
+        break          # the legacy loop usually stops after the first pass
+
+
+def tune_scale() -> None:
+    A = _graph(64)
+    S = _students()
+    for n in (64, 256, 1024):
+        fleet = _fleet(n)
+        t0 = time.perf_counter()
+        ir = PL.tune_d_th_ir(fleet, A, S, p_th=0.25, seed=0)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"plan_scale/tune/N{n}", dt,
+             f"K={ir.K};objective={ir.objective():.3f};"
+             f"feasible={int(ir.feasible)}")
+
+
+def vectorized_speedup() -> None:
+    A = _graph(64)
+    S = _students()
+    for n in (64, 256):
+        fleet = _fleet(n)
+        t0 = time.perf_counter()
+        PL.tune_d_th_ir(fleet, A, S, p_th=0.25, seed=0)
+        t_vec = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _object_path_tune(fleet, A, S, p_th=0.25)
+        t_obj = time.perf_counter() - t0
+        emit(f"plan_scale/speedup/N{n}", t_vec * 1e6,
+             f"object_us={t_obj * 1e6:.0f};speedup={t_obj / max(t_vec, 1e-9):.1f}x")
+
+
+def _toy_server(ir):
+    import jax.numpy as jnp
+    from repro.runtime.serving import QuorumServer
+    Kp, Dk, C = ir.K, 4, 3
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(Kp, Dk, C)).astype(np.float32))
+    b = jnp.asarray(np.arange(C, dtype=np.float32))
+
+    def make_fn(scale):
+        return lambda x: x @ (scale * jnp.ones((x.shape[-1], Dk), jnp.float32))
+
+    return QuorumServer(ir, [make_fn(k + 1.0) for k in range(Kp)], W, b,
+                        failure=FailureModel(outages=False))
+
+
+def _controller_run(force_full: bool, *, n: int = 40, ticks: int = 120,
+                    seed: int = 11):
+    import jax.numpy as jnp
+    from repro.runtime.controller import ClusterController
+    from repro.runtime.failures import FailureInjector, markov_flap_schedule
+
+    A = _graph(32)
+    S = _students()
+    fleet = _fleet(n, seed=5)
+    ir = PL.tune_d_th_ir(fleet, A, S, p_th=0.3, seed=0)
+    srv = _toy_server(ir)
+    events = markov_flap_schedule([d.name for d in fleet], 0.12, 0.35, ticks,
+                                  np.random.default_rng(seed))
+    ctl = ClusterController(ir, server=srv, injector=FailureInjector(events),
+                            force_full=force_full, seed=0)
+    x = jnp.asarray(np.ones((2, 5), np.float32))
+    served_ok = events_n = 0
+    wall = redeploy = rejit = 0.0
+    objs = []
+    for _ in range(ticks):
+        out = ctl.step()
+        if out is None:
+            continue
+        events_n += 1
+        wall += out.wall_s
+        redeploy += out.redeployed
+        rejit += len(out.rejitted_slots)
+        objs.append(out.objective)
+        srv.failure = FailureModel(forced_failures=sorted(ctl.down),
+                                   outages=False)
+        res = srv.serve(x)
+        served_ok += int(res.arrived.all())
+    return {
+        "events": events_n,
+        "kinds": [o.kind for o in ctl.history],
+        "wall_us": wall * 1e6,
+        "redeploy": redeploy,
+        "rejit": rejit,
+        "obj": float(np.mean([o for o in objs if np.isfinite(o)] or [np.inf])),
+        "served_ok": served_ok,
+        "feasible": all(o.feasible for o in ctl.history),
+    }
+
+
+def controller_bench() -> None:
+    rep = _controller_run(force_full=False)
+    full = _controller_run(force_full=True)
+    for name, r in (("repair", rep), ("full", full)):
+        n_full = sum(k == "full_replan" for k in r["kinds"])
+        emit(f"plan_scale/controller/{name}", r["wall_us"],
+             f"events={r['events']};full_replans={n_full};"
+             f"redeploy={r['redeploy']:.0f};rejit={r['rejit']:.0f};"
+             f"served_ok={r['served_ok']}/{r['events']};"
+             f"feasible={int(r['feasible'])}")
+    ratio = rep["obj"] / max(full["obj"], 1e-12)
+    wins = (rep["rejit"] < full["rejit"] and rep["redeploy"] < full["redeploy"]
+            and rep["wall_us"] < full["wall_us"])
+    emit("plan_scale/controller/ratio", 0.0,
+         f"obj_ratio={ratio:.3f};wall_speedup={full['wall_us'] / max(rep['wall_us'], 1e-9):.1f}x;"
+         f"repair_strictly_cheaper={int(wins)}")
+
+
+def main() -> None:
+    tune_scale()
+    vectorized_speedup()
+    controller_bench()
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ import traceback
 MODULES = [
     "benchmarks.roofline",             # fast: reads the dry-run artifact
     "benchmarks.sim_speed",            # Monte-Carlo engine: loop vs vectorized
+    "benchmarks.plan_scale",           # PlanIR planner scale + controller
     "benchmarks.fig4_redundancy",      # planner only
     "benchmarks.fig7_heterogeneity",   # planner + simulator
     "benchmarks.fig3_latency",         # simulator + one trained ensemble

@@ -66,6 +66,15 @@ def main():
     print("new plan:", new_plan.summary())
     print("student redeployment map (new slot -> old student):", mapping)
 
+    # ...or let the live server route the loss through the online
+    # ClusterController: groups that lost quorum are repaired incrementally
+    # (donor replicas moved in) and untouched portion forwards keep their jit
+    out = srv.remove_device(devices[0].name)
+    if out is not None:
+        print(f"\ncontroller {out.kind}: moved={list(out.moved_devices)} "
+              f"re-jitted={len(out.rejitted_slots)} "
+              f"objective={out.objective:.3f} feasible={out.feasible}")
+
 
 if __name__ == "__main__":
     main()

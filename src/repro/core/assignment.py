@@ -32,8 +32,10 @@ class StudentArch:
 def hungarian(weights: np.ndarray) -> np.ndarray:
     """Max-weight square assignment. Returns col index for each row.
 
-    Jonker-Volgenant style O(n³) shortest augmenting path implementation
-    (cost = -weights for maximization).
+    Jonker-Volgenant style O(n³) shortest augmenting path with the inner
+    column scans vectorized in numpy (cost = -weights for maximization).
+    Tie-breaking matches the scalar reference: the first column achieving
+    the minimum reduced cost is expanded.
     """
     w = np.asarray(weights, np.float64)
     n, m = w.shape
@@ -51,23 +53,21 @@ def hungarian(weights: np.ndarray) -> np.ndarray:
         used = np.zeros(n + 1, bool)
         while True:
             used[j0] = True
-            i0, delta, j1 = p[j0], INF, -1
-            for j in range(1, n + 1):
-                if used[j]:
-                    continue
-                cur = cost[i0 - 1, j - 1] - u[i0] - v[j]
-                if cur < minv[j]:
-                    minv[j] = cur
-                    way[j] = j0
-                if minv[j] < delta:
-                    delta = minv[j]
-                    j1 = j
-            for j in range(n + 1):
-                if used[j]:
-                    u[p[j]] += delta
-                    v[j] -= delta
-                else:
-                    minv[j] -= delta
+            i0 = p[j0]
+            # relax every free column against the newly-used one at once
+            free = ~used
+            free[0] = False
+            cur = cost[i0 - 1, :] - u[i0] - v[1:]
+            better = free[1:] & (cur < minv[1:])
+            minv[1:][better] = cur[better]
+            way[1:][better] = j0
+            # delta = first free column achieving the minimum reduced cost
+            masked = np.where(free, minv, INF)
+            j1 = int(np.argmin(masked[1:])) + 1
+            delta = masked[j1]
+            np.add.at(u, p[used], delta)
+            v[used] -= delta
+            minv[~used] -= delta
             j0 = j1
             if p[j0] == 0:
                 break
@@ -133,6 +133,68 @@ def assignment_weights(groups: Sequence[Sequence[Device]],
         for b, size in enumerate(part_sizes):
             _, W[a, b] = best_student_for(g, size, students)
     return W
+
+
+def select_students(member: np.ndarray, device_caps: np.ndarray,
+                    student_caps: np.ndarray, part_sizes: np.ndarray,
+                    latency_nd: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized Eq. 5 over ALL (group, partition) pairs at once.
+
+    member:       (K, N) bool group membership
+    device_caps:  (N, 4) ``plan_ir.DEVICE_COLS`` matrix
+    student_caps: (S, 4) ``plan_ir.STUDENT_COLS`` matrix
+    part_sizes:   (P,) normalized partition knowledge volumes
+    latency_nd:   (S, N) precomputed Eq. 1a latency matrix
+
+    Returns ``(best (K, P) int student index, −1 = none feasible;
+    W (K, P) Eq. 5 weights)``. Selection reproduces
+    :func:`best_student_for` exactly, including catalogue-order
+    tie-breaking: among capable students the fastest wins; with no capable
+    student the highest-capacity feasible one is the (1h) fallback.
+    """
+    member = np.asarray(member, bool)
+    sizes = np.asarray(part_sizes, np.float64).reshape(-1)
+    K, N = member.shape
+    S = student_caps.shape[0]
+    P = sizes.shape[0]
+    if K == 0 or P == 0 or S == 0:
+        return np.full((K, P), -1, np.int64), np.zeros((K, P))
+    params = student_caps[:, 1]
+    capacity = student_caps[:, 3]
+    # group aggregates (∞/-∞ for empty groups → nothing feasible)
+    min_mem = np.where(member, device_caps[None, :, 1], np.inf).min(axis=1)
+    glat = np.where(member[None], latency_nd[:, None, :], np.inf).min(axis=2)
+    feasible = (params[:, None] <= min_mem[None, :]) & member.any(1)[None, :]
+    cap_scale = capacity.max()
+    capable = capacity[:, None] >= sizes[None, :] * cap_scale       # (S, P)
+    mask = feasible[:, :, None] & capable[:, None, :]               # (S, K, P)
+    lat_cand = np.where(mask, glat[:, :, None], np.inf)
+    idx_capable = lat_cand.argmin(axis=0)                           # (K, P)
+    any_capable = mask.any(axis=0)
+    cap_fb = np.where(feasible, capacity[:, None], -np.inf)
+    idx_fb = cap_fb.argmax(axis=0)                                  # (K,)
+    has_feasible = feasible.any(axis=0)                             # (K,)
+    best = np.where(any_capable, idx_capable, idx_fb[:, None])
+    best = np.where(has_feasible[:, None], best, -1)
+    safe = np.maximum(best, 0)
+    blat = glat[safe, np.arange(K)[:, None]]
+    W = np.where(best >= 0,
+                 capacity[safe] / (np.maximum(sizes, 1e-9)[None, :]
+                                   * np.maximum(blat, 1e-12)),
+                 0.0)
+    return best.astype(np.int64), W
+
+
+def match_arrays(W: np.ndarray) -> List[Tuple[int, int]]:
+    """KM matching of a (K, P) weight matrix (padded square internally).
+    Returns in-range (group, partition) pairs."""
+    K, P = W.shape
+    n = max(K, P)
+    Wp = np.zeros((n, n))
+    Wp[:K, :P] = W
+    cols = hungarian(Wp)
+    return [(g, int(p)) for g, p in enumerate(cols) if g < K and p < P]
 
 
 def match_groups_to_partitions(groups: Sequence[Sequence[Device]],

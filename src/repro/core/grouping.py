@@ -59,48 +59,50 @@ class Grouping:
                          for g in self.groups])
 
 
-def follow_the_leader(devices: Sequence[Device], d_th: float, p_th: float,
-                      *, normalize: bool = True, seed: int = 0,
-                      repair: bool = False) -> Grouping:
-    """Alg. 1 lines 1–11. Iteratively add each device to the first group whose
-    centroid is within d_th — but only while the group's cumulative outage is
-    still ABOVE p_th (a group that already satisfies its reliability target
-    stops absorbing replicas, freeing devices to form new groups). Devices
-    matching no group start a new one.
+def follow_the_leader_arrays(caps: np.ndarray, p_out: np.ndarray,
+                             d_th: float, p_th: float, *,
+                             normalize: bool = True,
+                             repair: bool = False) -> List[List[int]]:
+    """Array-backed follow-the-leader (Alg. 1 lines 1–11) over a ``(N, 2)``
+    capacity matrix (``capacity_vec`` order: ``c_mem, c_core``) and an
+    ``(N,)`` outage vector. Returns groups as device-index lists.
+
+    The greedy scan is inherently sequential, but each step is vectorized:
+    one fused distance computation against ALL group centroids and an O(1)
+    running-product outage update per placement — O(N·K) numpy work instead
+    of the legacy O(N·K·|G|) Python loops. Semantics (first matching group,
+    centroid = mean of members, outage product in insertion order) are
+    identical to the object path, which now delegates here.
     """
-    devices = list(devices)
-    if not devices:
-        return Grouping([])
-    scale = None
-    if normalize:
-        caps = np.stack([d.capacity_vec() for d in devices])
-        scale = np.maximum(caps.std(axis=0), 1e-9)
+    caps = np.asarray(caps, np.float64).reshape(-1, 2)
+    p_out = np.asarray(p_out, np.float64).reshape(-1)
+    N = caps.shape[0]
+    if N == 0:
+        return []
+    scale = (np.maximum(caps.std(axis=0), 1e-9) if normalize
+             else np.ones(2, np.float64))
 
-    rng = np.random.default_rng(seed)
-    order = list(range(len(devices)))
-    first = order[0]
+    members: List[List[int]] = [[0]]
+    cents = np.empty((N, 2), np.float64)    # centroid buffer, first K rows live
+    cents[0] = caps[0]
+    outage = np.empty(N, np.float64)        # running Π p_out per group
+    outage[0] = p_out[0]
+    K = 1
 
-    groups: List[List[Device]] = [[devices[first]]]
-    cents: List[np.ndarray] = [devices[first].capacity_vec()]
-
-    def cent_dist(c: np.ndarray, d: Device) -> float:
-        v = d.capacity_vec()
-        if scale is not None:
-            return float(np.sqrt((((c - v) / scale) ** 2).sum()))
-        return float(np.sqrt(((c - v) ** 2).sum()))
-
-    for i in order[1:]:
-        d = devices[i]
-        placed = False
-        for gi, g in enumerate(groups):
-            if cent_dist(cents[gi], d) <= d_th and group_outage(g) > p_th:
-                g.append(d)
-                cents[gi] = np.mean([x.capacity_vec() for x in g], axis=0)
-                placed = True
-                break
-        if not placed:
-            groups.append([d])
-            cents.append(d.capacity_vec())
+    for i in range(1, N):
+        v = caps[i]
+        dist = np.sqrt((((cents[:K] - v) / scale) ** 2).sum(axis=1))
+        ok = (dist <= d_th) & (outage[:K] > p_th)
+        if ok.any():
+            gi = int(np.argmax(ok))         # first matching group, as legacy
+            members[gi].append(i)
+            cents[gi] = caps[members[gi]].mean(axis=0)
+            outage[gi] *= p_out[i]
+        else:
+            members.append([i])
+            cents[K] = v
+            outage[K] = p_out[i]
+            K += 1
 
     if repair:
         # Beyond-paper repair pass: Alg. 1 can strand a high-outage device as
@@ -108,22 +110,43 @@ def follow_the_leader(devices: Sequence[Device], d_th: float, p_th: float,
         # paper acknowledges the resulting infeasibility (§V). Merge each
         # violating group into its nearest neighbour until (1f) holds
         # everywhere or one group remains.
-        while len(groups) > 1:
-            bad = [gi for gi, g in enumerate(groups)
-                   if group_outage(g) > p_th]
-            if not bad:
+        while len(members) > 1:
+            bad = np.flatnonzero(outage[:len(members)] > p_th)
+            if not len(bad):
                 break
-            gi = bad[0]
-            cents = [np.mean([x.capacity_vec() for x in g], axis=0)
-                     for g in groups]
-            dists = [np.linalg.norm((cents[gi] - c) /
-                                    (scale if scale is not None else 1.0))
-                     for c in cents]
-            dists[gi] = float("inf")
-            tgt = int(np.argmin(dists))
-            groups[tgt].extend(groups[gi])
-            del groups[gi]
-    return Grouping(groups)
+            gi = int(bad[0])
+            cent = np.stack([caps[g].mean(axis=0) for g in members])
+            dist = np.sqrt((((cent - cent[gi]) / scale) ** 2).sum(axis=1))
+            dist[gi] = np.inf
+            tgt = int(np.argmin(dist))
+            members[tgt].extend(members[gi])
+            out = 1.0
+            for idx in members[tgt]:        # insertion-order product, as legacy
+                out *= p_out[idx]
+            outage[tgt] = out
+            del members[gi]
+            outage[gi:len(members)] = outage[gi + 1:len(members) + 1].copy()
+    return members
+
+
+def follow_the_leader(devices: Sequence[Device], d_th: float, p_th: float,
+                      *, normalize: bool = True, seed: int = 0,
+                      repair: bool = False) -> Grouping:
+    """Alg. 1 lines 1–11. Iteratively add each device to the first group whose
+    centroid is within d_th — but only while the group's cumulative outage is
+    still ABOVE p_th (a group that already satisfies its reliability target
+    stops absorbing replicas, freeing devices to form new groups). Devices
+    matching no group start a new one. Thin object wrapper around
+    :func:`follow_the_leader_arrays` (the hot path).
+    """
+    devices = list(devices)
+    if not devices:
+        return Grouping([])
+    caps = np.stack([d.capacity_vec() for d in devices])
+    p_out = np.array([d.p_out for d in devices], np.float64)
+    idx_groups = follow_the_leader_arrays(caps, p_out, d_th, p_th,
+                                          normalize=normalize, repair=repair)
+    return Grouping([[devices[i] for i in g] for g in idx_groups])
 
 
 def grouping_feasible(grouping: Grouping, p_th: float) -> bool:

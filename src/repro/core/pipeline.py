@@ -131,6 +131,7 @@ class Ensemble:
     fc: Dict[str, jnp.ndarray]
     part_dims: List[int]
     teacher_acc: float
+    ir: Optional["PlanIR"] = None               # canonical array-backed plan
 
     def portions(self, x: jnp.ndarray, arrived: Optional[np.ndarray] = None
                  ) -> jnp.ndarray:
@@ -221,10 +222,14 @@ def build_rocoin(key, *, n_classes: int = 10, teacher_depth: int = 16,
 
     nominal = zoo_for(max(M // max(len(devices) // 2, 1), 8))
 
+    ir = None
     if planner == "rocoin":
-        plan = (PL.make_plan(devices, A, nominal, d_th=d_th, p_th=p_th)
-                if d_th is not None else
-                PL.tune_d_th(devices, A, nominal, p_th=p_th))
+        # the canonical IR is the planner's native output; the legacy Plan
+        # below is a derived view for the distillation loop
+        ir = (PL.make_plan_ir(devices, A, nominal, d_th=d_th, p_th=p_th)
+              if d_th is not None else
+              PL.tune_d_th_ir(devices, A, nominal, p_th=p_th))
+        plan = ir.to_plan(devices=devices, students=nominal)
     elif planner == "rocoin-g":
         plan = PL.plan_rocoin_g(devices, A, nominal, d_th=d_th or 1.0, p_th=p_th)
     elif planner == "hetnonn":
@@ -252,7 +257,10 @@ def build_rocoin(key, *, n_classes: int = 10, teacher_depth: int = 16,
     fc = DS.fc_head_init(k_fc, sum(part_dims), n_classes)
     fc = _train_fc(fc, students, part_dims, data,
                    steps=max(student_steps // 2, 10), batch=batch)
-    return Ensemble(plan, students, fc, part_dims, teacher_acc)
+    if ir is None:      # baseline planners produce object plans; lift them
+        from repro.core.plan_ir import PlanIR
+        ir = PlanIR.from_plan(plan, students=nominal, devices=devices)
+    return Ensemble(plan, students, fc, part_dims, teacher_acc, ir=ir)
 
 
 def _distill_student(sparams, scfg, sfwd, tparams, tcfg, part, data,

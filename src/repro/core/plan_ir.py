@@ -1,0 +1,324 @@
+"""Canonical array-backed plan intermediate representation (PlanIR).
+
+Before this module the plan existed in three private, mutually-inconsistent
+encodings: the planner's object graph (``planner.Plan`` → ``GroupPlan`` →
+``Device``/``StudentArch``), the Monte-Carlo engine's flattened replica view
+(``simulator.PlanArrays``), and the quorum server's lazily-rebuilt
+``_arrays`` cache. :class:`PlanIR` replaces them with one frozen, array-backed
+record from which every other view is derived:
+
+  - device catalogue: names + a ``(N, 4)`` capacity matrix
+    (``c_core, c_mem, r_tran, p_out``),
+  - student catalogue: names + a ``(S, 4)`` profile matrix
+    (``flops, params, out_bytes, capacity``),
+  - ``member``   ``(K, N)`` bool — group membership (slot-major; slot k
+    serves partition k),
+  - ``partition`` ``(K, M)`` bool — knowledge-partition filter masks,
+  - ``student_of`` ``(K,)`` int — student index per slot (−1 = none),
+  - ``latency_nd`` ``(S, N)`` — the precomputed Eq. 1a latency matrix
+    ``flops_s / c_core_n + 8 · out_bytes_s / r_tran_n``.
+
+All arrays are defensively copied and frozen (read-only) at construction;
+"mutation" is :meth:`with_` / :meth:`drop_device`, which return new IRs.
+Legacy interop: :meth:`from_plan` / :meth:`to_plan` round-trip the object
+graph, :meth:`to_arrays` derives the Monte-Carlo ``PlanArrays`` view.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+
+DEVICE_COLS = ("c_core", "c_mem", "r_tran", "p_out")
+STUDENT_COLS = ("flops", "params", "out_bytes", "capacity")
+
+
+def device_matrix(devices: Sequence[Device]) -> Tuple[Tuple[str, ...], np.ndarray]:
+    """Pack Device objects into (names, (N, 4) float64 matrix)."""
+    names = tuple(d.name for d in devices)
+    caps = np.array([[d.c_core, d.c_mem, d.r_tran, d.p_out] for d in devices],
+                    np.float64).reshape(len(names), 4)
+    return names, caps
+
+
+def student_matrix(students: Sequence[StudentArch]
+                   ) -> Tuple[Tuple[str, ...], np.ndarray]:
+    """Pack StudentArch objects into (names, (S, 4) float64 matrix)."""
+    names = tuple(s.name for s in students)
+    caps = np.array([[s.flops, s.params, s.out_bytes, s.capacity]
+                     for s in students], np.float64).reshape(len(names), 4)
+    return names, caps
+
+
+def eq1a_latency(student_caps: np.ndarray, device_caps: np.ndarray
+                 ) -> np.ndarray:
+    """Eq. 1a latency matrix (S, N): flops/c_core + 8·out_bytes/r_tran."""
+    scaps = np.asarray(student_caps, np.float64).reshape(-1, 4)
+    dcaps = np.asarray(device_caps, np.float64).reshape(-1, 4)
+    return (scaps[:, 0:1] / dcaps[None, :, 0]
+            + 8.0 * scaps[:, 2:3] / dcaps[None, :, 2])
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanIR:
+    device_names: Tuple[str, ...]        # (N,)
+    device_caps: np.ndarray              # (N, 4) DEVICE_COLS
+    student_names: Tuple[str, ...]       # (S,)
+    student_caps: np.ndarray             # (S, 4) STUDENT_COLS
+    member: np.ndarray                   # (K, N) bool
+    partition: np.ndarray                # (K, M) bool
+    student_of: np.ndarray               # (K,) int64, -1 = no student
+    group_idx: np.ndarray                # (K,) int64 legacy group ids
+    latency_nd: np.ndarray               # (S, N) Eq. 1a matrix
+    A: np.ndarray                        # (M, M) activation graph
+    d_th: float
+    p_th: float
+
+    def __post_init__(self):
+        N, S = len(self.device_names), len(self.student_names)
+        specs = [
+            ("device_caps", np.float64, (N, 4)),
+            ("student_caps", np.float64, (S, 4)),
+            ("member", bool, None),
+            ("partition", bool, None),
+            ("student_of", np.int64, None),
+            ("group_idx", np.int64, None),
+            ("latency_nd", np.float64, (S, N)),
+            ("A", np.float64, None),
+        ]
+        for field, dtype, shape in specs:
+            arr = np.array(getattr(self, field), dtype=dtype, copy=True)
+            if shape is not None:
+                arr = arr.reshape(shape)
+            arr.setflags(write=False)
+            object.__setattr__(self, field, arr)
+        object.__setattr__(self, "device_names", tuple(self.device_names))
+        object.__setattr__(self, "student_names", tuple(self.student_names))
+        object.__setattr__(self, "d_th", float(self.d_th))
+        object.__setattr__(self, "p_th", float(self.p_th))
+
+    # -- shape accessors -----------------------------------------------------
+
+    @property
+    def K(self) -> int:
+        return int(self.member.shape[0])
+
+    @property
+    def N(self) -> int:
+        return len(self.device_names)
+
+    @property
+    def M(self) -> int:
+        return int(self.partition.shape[1])
+
+    @property
+    def S(self) -> int:
+        return len(self.student_names)
+
+    # -- objective / constraints (Eq. 1a, 1f, 1g) ----------------------------
+
+    def group_latency(self, alive: Optional[np.ndarray] = None) -> np.ndarray:
+        """(K,) Eq. 1a inner: min over (live) members of the slot student's
+        latency; ∞ for student-less or (live-)empty slots."""
+        stu = self.student_of
+        lat = np.where(stu[:, None] >= 0,
+                       self.latency_nd[np.maximum(stu, 0)], np.inf)
+        m = self.member if alive is None else self.member & alive[None, :]
+        return np.where(m, lat, np.inf).min(axis=1) if self.N else \
+            np.full(self.K, np.inf)
+
+    def objective(self, alive: Optional[np.ndarray] = None) -> float:
+        """Eq. 1a outer: blocked by the slowest slot (∞ if any slot serves
+        nothing)."""
+        if self.K == 0:
+            return float("inf")
+        return float(self.group_latency(alive).max())
+
+    @property
+    def latency(self) -> float:
+        return self.objective()
+
+    def group_outage(self, alive: Optional[np.ndarray] = None) -> np.ndarray:
+        """(K,) Eq. 1f: Π p_out over (live) members; 1.0 for empty slots."""
+        m = self.member if alive is None else self.member & alive[None, :]
+        return np.where(m, self.device_caps[None, :, 3], 1.0).prod(axis=1)
+
+    def quorum(self, alive: Optional[np.ndarray] = None) -> np.ndarray:
+        """(K,) bool — slot has at least one (live) member."""
+        m = self.member if alive is None else self.member & alive[None, :]
+        return m.any(axis=1)
+
+    @property
+    def feasible(self) -> bool:
+        return bool(self.K > 0
+                    and (self.student_of >= 0).all()
+                    and self.quorum().all()
+                    and (self.group_outage() <= self.p_th).all())
+
+    def total_params(self) -> float:
+        """S-Total: all student replicas (Fig. 4)."""
+        has = self.student_of >= 0
+        params = self.student_caps[np.maximum(self.student_of, 0), 1]
+        return float((params * self.member.sum(axis=1) * has).sum())
+
+    def valid_params(self) -> float:
+        """S-Valid: one replica per partition (Fig. 4)."""
+        has = self.student_of >= 0
+        params = self.student_caps[np.maximum(self.student_of, 0), 1]
+        return float((params * has).sum())
+
+    def partition_sizes(self) -> np.ndarray:
+        """C^para proxy per slot: degree-mass volume, normalized to Σ = 1
+        (same quantity as :func:`planner.partition_sizes`)."""
+        vols = np.array([self.A[np.flatnonzero(row)].sum()
+                         for row in self.partition], np.float64)
+        return vols / max(vols.sum(), 1e-12)
+
+    def alive_mask(self, down_names: Sequence[str]) -> np.ndarray:
+        down = set(down_names)
+        return np.array([n not in down for n in self.device_names], bool)
+
+    def summary(self) -> Dict:
+        has = self.student_of >= 0
+        return {
+            "K": self.K,
+            "latency": self.objective(),
+            "feasible": self.feasible,
+            "s_total": self.total_params(),
+            "s_valid": self.valid_params(),
+            "group_sizes": self.member.sum(axis=1).tolist(),
+            "students": [self.student_names[s] if ok else None
+                         for s, ok in zip(self.student_of, has)],
+        }
+
+    def validate(self) -> "PlanIR":
+        """Structural invariants: disjoint membership, disjoint + covering
+        partitions, indices in range. Returns self for chaining."""
+        if (self.member.sum(axis=0) > 1).any():
+            raise ValueError("a device belongs to more than one group")
+        if (self.partition.sum(axis=0) > 1).any():
+            raise ValueError("a filter belongs to more than one partition")
+        if self.K and not self.partition.any(axis=0).all():
+            raise ValueError("partitions do not cover all filters")
+        if (self.student_of >= self.S).any():
+            raise ValueError("student index out of range")
+        return self
+
+    # -- functional updates --------------------------------------------------
+
+    def with_(self, **changes) -> "PlanIR":
+        """Functional update (frozen arrays are re-copied by __post_init__)."""
+        return dataclasses.replace(self, **changes)
+
+    def drop_device(self, name: str) -> "PlanIR":
+        """Permanent loss: remove the device column everywhere."""
+        if name not in self.device_names:
+            return self
+        keep = np.array([n != name for n in self.device_names], bool)
+        return self.with_(
+            device_names=tuple(n for n in self.device_names if n != name),
+            device_caps=self.device_caps[keep],
+            member=self.member[:, keep],
+            latency_nd=self.latency_nd[:, keep],
+        )
+
+    # -- reconstruction of the object views ----------------------------------
+
+    def devices(self) -> Tuple[Device, ...]:
+        return tuple(Device(n, *map(float, self.device_caps[i]))
+                     for i, n in enumerate(self.device_names))
+
+    def students(self) -> Tuple[StudentArch, ...]:
+        return tuple(StudentArch(n, *map(float, self.student_caps[i]))
+                     for i, n in enumerate(self.student_names))
+
+    # -- legacy interop ------------------------------------------------------
+
+    @classmethod
+    def from_plan(cls, plan, students: Optional[Sequence[StudentArch]] = None,
+                  devices: Optional[Sequence[Device]] = None) -> "PlanIR":
+        """Build the canonical IR from a legacy ``planner.Plan``. Slots are
+        ordered by partition index. `students`/`devices` widen the catalogues
+        beyond what the plan references (e.g. the full zoo / fleet)."""
+        groups = sorted(plan.groups, key=lambda g: g.partition_idx)
+        if devices is None:
+            seen: Dict[str, Device] = {}
+            for g in groups:
+                for d in g.devices:
+                    seen.setdefault(d.name, d)
+            devices = list(seen.values())
+        if students is None:
+            sd: Dict[str, StudentArch] = {}
+            for g in groups:
+                if g.student is not None:
+                    sd.setdefault(g.student.name, g.student)
+            students = list(sd.values())
+        names, dcaps = device_matrix(devices)
+        snames, scaps = student_matrix(students)
+        col = {n: i for i, n in enumerate(names)}
+        sidx = {n: i for i, n in enumerate(snames)}
+        A = np.asarray(plan.A, np.float64)
+        M, K, N = A.shape[0], len(groups), len(names)
+        member = np.zeros((K, N), bool)
+        partition = np.zeros((K, M), bool)
+        student_of = np.full(K, -1, np.int64)
+        group_idx = np.zeros(K, np.int64)
+        for k, g in enumerate(groups):
+            for d in g.devices:
+                member[k, col[d.name]] = True
+            partition[k, np.asarray(g.filters, np.int64)] = True
+            if g.student is not None:
+                student_of[k] = sidx[g.student.name]
+            group_idx[k] = g.group_idx
+        return cls(names, dcaps, snames, scaps, member, partition, student_of,
+                   group_idx, eq1a_latency(scaps, dcaps), A,
+                   float(plan.d_th), float(plan.p_th))
+
+    def to_plan(self, devices: Optional[Sequence[Device]] = None,
+                students: Optional[Sequence[StudentArch]] = None):
+        """Rebuild the legacy object graph (slot k → partition_idx k).
+        `devices`/`students` supply the original objects (matched by name);
+        otherwise equal-valued objects are reconstructed from the arrays."""
+        from repro.core import planner as PL
+        dev_by_name = {d.name: d for d in (devices or ())}
+        stu_by_name = {s.name: s for s in (students or ())}
+        devs = [dev_by_name.get(n, d) for n, d in
+                zip(self.device_names, self.devices())]
+        studs = [stu_by_name.get(n, s) for n, s in
+                 zip(self.student_names, self.students())]
+        groups = []
+        for k in range(self.K):
+            s = int(self.student_of[k])
+            groups.append(PL.GroupPlan(
+                group_idx=int(self.group_idx[k]),
+                devices=[devs[n] for n in np.flatnonzero(self.member[k])],
+                partition_idx=k,
+                filters=np.flatnonzero(self.partition[k]),
+                student=studs[s] if s >= 0 else None,
+            ))
+        return PL.Plan(groups, np.array(self.A), self.d_th, self.p_th)
+
+    def to_arrays(self):
+        """Derive the Monte-Carlo ``PlanArrays`` view (flattened replica
+        devices; student-less slots keep their slot but contribute no
+        columns — same contract as the legacy ``simulator.plan_arrays``)."""
+        from repro.core.simulator import PlanArrays
+        t, slot, p_out, names = [], [], [], []
+        for k in range(self.K):
+            s = int(self.student_of[k])
+            if s < 0:
+                continue
+            for n in np.flatnonzero(self.member[k]):
+                t.append(float(self.latency_nd[s, n]))
+                slot.append(k)
+                p_out.append(float(self.device_caps[n, 3]))
+                names.append(self.device_names[n])
+        slot_arr = np.asarray(slot, np.int64)
+        cols = tuple(np.flatnonzero(slot_arr == k) for k in range(self.K))
+        return PlanArrays(np.asarray(t, np.float64), slot_arr,
+                          np.asarray(p_out, np.float64), tuple(names),
+                          self.K, cols)

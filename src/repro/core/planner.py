@@ -18,7 +18,8 @@ from repro.core import assignment as ASG
 from repro.core import grouping as GRP
 from repro.core import ncut as NC
 from repro.core.assignment import StudentArch
-from repro.core.grouping import Device, Grouping
+from repro.core.grouping import Device
+from repro.core.plan_ir import PlanIR, device_matrix, eq1a_latency, student_matrix
 
 
 @dataclasses.dataclass
@@ -96,50 +97,135 @@ def partition_sizes(A: np.ndarray, parts: Sequence[np.ndarray]) -> List[float]:
     return list(vols / tot)
 
 
+class _Precomputed:
+    """Per-sweep constants of the vectorized planner: device/student capacity
+    matrices, the Eq. 1a latency matrix, and the Ncut partition cache keyed
+    by K (the candidate × repair sweep of :func:`tune_d_th` previously
+    recomputed identical spectral partitions for every d_th)."""
+
+    def __init__(self, devices: Sequence[Device], A: np.ndarray,
+                 students: Sequence[StudentArch], seed: int):
+        self.devices = list(devices)
+        self.A = np.asarray(A, np.float64)
+        self.students = list(students)
+        self.seed = seed
+        self.dnames, self.dcaps = device_matrix(self.devices)
+        self.snames, self.scaps = student_matrix(self.students)
+        self.latency_nd = eq1a_latency(self.scaps, self.dcaps)
+        self.caps2 = self.dcaps[:, [1, 0]]          # capacity_vec order
+        self._parts: Dict[int, List[np.ndarray]] = {}
+
+    def partitions(self, K: int) -> List[np.ndarray]:
+        if K not in self._parts:
+            self._parts[K] = NC.ncut_partition(self.A, K, seed=self.seed)
+        return self._parts[K]
+
+
+def _plan_from_groups(pre: _Precomputed, groups: List[List[int]],
+                      d_th: float, p_th: float) -> PlanIR:
+    """Ncut partition (K = #groups) → vectorized Eq. 5 weights → KM matching,
+    assembled into the canonical PlanIR (slot k serves partition k)."""
+    K = len(groups)
+    N, M = len(pre.dnames), pre.A.shape[0]
+    parts = pre.partitions(K) if K else []
+    Kp = len(parts)
+    if Kp == 0:
+        return PlanIR(pre.dnames, pre.dcaps, pre.snames, pre.scaps,
+                      np.zeros((0, N), bool), np.zeros((0, M), bool),
+                      np.zeros(0, np.int64), np.zeros(0, np.int64),
+                      pre.latency_nd, pre.A, d_th, p_th)
+    sizes = np.asarray(partition_sizes(pre.A, parts), np.float64)
+    member_g = np.zeros((Kp, N), bool)          # groups truncated to Kp, as
+    for g, idxs in enumerate(groups[:Kp]):      # in the original Algorithm 1
+        member_g[g, idxs] = True
+    best, W = ASG.select_students(member_g, pre.dcaps, pre.scaps, sizes,
+                                  pre.latency_nd)
+    member = np.zeros((Kp, N), bool)
+    partition = np.zeros((Kp, M), bool)
+    student_of = np.full(Kp, -1, np.int64)
+    group_idx = np.zeros(Kp, np.int64)
+    for g, p in ASG.match_arrays(W):
+        member[p] = member_g[g]
+        partition[p, parts[p]] = True
+        student_of[p] = best[g, p]
+        group_idx[p] = g
+    return PlanIR(pre.dnames, pre.dcaps, pre.snames, pre.scaps, member,
+                  partition, student_of, group_idx, pre.latency_nd, pre.A,
+                  d_th, p_th)
+
+
+def make_plan_ir(devices: Sequence[Device], A: np.ndarray,
+                 students: Sequence[StudentArch], *, d_th: float,
+                 p_th: float, seed: int = 0, repair: bool = False,
+                 _pre: Optional[_Precomputed] = None) -> PlanIR:
+    """Algorithm 1 on the array path: vectorized follow-the-leader grouping →
+    Ncut partition (K = #groups) → vectorized Eq. 5 → KM assignment."""
+    pre = _pre if _pre is not None else _Precomputed(devices, A, students, seed)
+    groups = GRP.follow_the_leader_arrays(pre.caps2, pre.dcaps[:, 3],
+                                          d_th, p_th, repair=repair)
+    return _plan_from_groups(pre, groups, d_th, p_th)
+
+
 def make_plan(devices: Sequence[Device], A: np.ndarray,
               students: Sequence[StudentArch], *, d_th: float, p_th: float,
               seed: int = 0, repair: bool = False) -> Plan:
-    """Algorithm 1: grouping → Ncut partition (K = #groups) → KM assignment."""
-    grouping = GRP.follow_the_leader(devices, d_th, p_th, seed=seed,
-                                     repair=repair)
-    K = grouping.K
-    parts = NC.ncut_partition(np.asarray(A), K, seed=seed)
-    K = len(parts)
-    sizes = partition_sizes(A, parts)
-    matches = ASG.match_groups_to_partitions(
-        [tuple(g) for g in grouping.groups[:K]], sizes, students)
-    plans = []
-    for g_idx, p_idx, student in matches:
-        plans.append(GroupPlan(g_idx, list(grouping.groups[g_idx]), p_idx,
-                               parts[p_idx], student))
-    return Plan(plans, np.asarray(A), d_th, p_th)
+    """Algorithm 1: grouping → Ncut partition (K = #groups) → KM assignment.
+    Legacy object-graph view of :func:`make_plan_ir`."""
+    ir = make_plan_ir(devices, A, students, d_th=d_th, p_th=p_th, seed=seed,
+                      repair=repair)
+    return ir.to_plan(devices=devices, students=students)
+
+
+def tune_d_th_ir(devices: Sequence[Device], A: np.ndarray,
+                 students: Sequence[StudentArch], *, p_th: float,
+                 candidates: Optional[Sequence[float]] = None,
+                 seed: int = 0) -> Optional[PlanIR]:
+    """The paper picks d_th 'through trial and error' — sweep candidates and
+    keep the feasible plan with the lowest Eq. 1a latency.
+
+    The sweep is batched: capacity/latency matrices are computed once,
+    spectral partitions are cached per K, and candidates that reproduce an
+    already-evaluated grouping reuse its plan instead of re-running
+    assignment (with 12 log-spaced d_th values most candidates collapse to a
+    handful of distinct groupings)."""
+    if candidates is None:
+        candidates = np.geomspace(0.05, 4.0, 12)
+    pre = _Precomputed(devices, A, students, seed)
+    memo: Dict[Tuple[Tuple[int, ...], ...], PlanIR] = {}
+    best: Optional[PlanIR] = None
+    for repair in (False, True):   # prefer the paper's pure Alg. 1; repair
+        for d_th in candidates:    # pass only when nothing feasible (§V)
+            groups = GRP.follow_the_leader_arrays(
+                pre.caps2, pre.dcaps[:, 3], float(d_th), p_th, repair=repair)
+            gkey = tuple(tuple(g) for g in groups)
+            ir = memo.get(gkey)
+            if ir is None:
+                ir = _plan_from_groups(pre, groups, float(d_th), p_th)
+                memo[gkey] = ir
+            if ir.K == 0:
+                continue
+            if best is None:
+                best = ir
+                continue
+            key = (not ir.feasible, ir.latency)
+            bkey = (not best.feasible, best.latency)
+            if key < bkey:
+                best = ir
+        if best is not None and best.feasible:
+            break
+    return best
 
 
 def tune_d_th(devices: Sequence[Device], A: np.ndarray,
               students: Sequence[StudentArch], *, p_th: float,
               candidates: Optional[Sequence[float]] = None,
               seed: int = 0) -> Plan:
-    """The paper picks d_th 'through trial and error' — sweep candidates and
-    keep the feasible plan with the lowest Eq. 1a latency."""
-    if candidates is None:
-        candidates = np.geomspace(0.05, 4.0, 12)
-    best: Optional[Plan] = None
-    for repair in (False, True):   # prefer the paper's pure Alg. 1; repair
-        for d_th in candidates:    # pass only when nothing feasible (§V)
-            plan = make_plan(devices, A, students, d_th=float(d_th),
-                             p_th=p_th, seed=seed, repair=repair)
-            if not plan.groups:
-                continue
-            if best is None:
-                best = plan
-                continue
-            key = (not plan.feasible, plan.latency)
-            bkey = (not best.feasible, best.latency)
-            if key < bkey:
-                best = plan
-        if best is not None and best.feasible:
-            break
-    return best
+    """Legacy object-graph view of :func:`tune_d_th_ir`."""
+    ir = tune_d_th_ir(devices, A, students, p_th=p_th,
+                      candidates=candidates, seed=seed)
+    if ir is None:
+        return None
+    return ir.to_plan(devices=devices, students=students)
 
 
 # ---------------------------------------------------------------------------

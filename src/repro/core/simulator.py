@@ -35,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.grouping import Device
+from repro.core.plan_ir import PlanIR
 from repro.core.planner import Plan
 
 
@@ -70,7 +71,12 @@ class PlanArrays:
     slot_cols: Tuple[np.ndarray, ...]  # per-slot device-column indices
 
 
-def plan_arrays(plan: Plan) -> PlanArrays:
+def plan_arrays(plan) -> PlanArrays:
+    """Flatten a plan (legacy ``Plan`` or canonical ``PlanIR``) into the
+    Monte-Carlo replica-device view. For a PlanIR this is a pure derivation
+    from the canonical arrays; the legacy loop is kept bit-compatible."""
+    if isinstance(plan, PlanIR):
+        return plan.to_arrays()
     t, slot, p_out, names = [], [], [], []
     for s, g in enumerate(plan.groups):
         if g.student is None:
@@ -237,6 +243,8 @@ def simulate(plan: Plan, trials: int = 100, seed: int = 0,
     if engine == "loop":
         if not isinstance(failure, FailureModel):
             raise ValueError("engine='loop' supports only FailureModel")
+        if isinstance(plan, PlanIR):
+            plan = plan.to_plan()
         return simulate_loop(plan, trials, seed, failure)
     if engine != "vectorized":
         raise ValueError(f"unknown engine {engine!r}")
@@ -252,23 +260,32 @@ def simulate(plan: Plan, trials: int = 100, seed: int = 0,
 # accuracy under k random device deletions (paper Fig. 5/6)
 # ---------------------------------------------------------------------------
 
-def sample_failure_masks(plan: Plan, n_failed: int, trials: int,
+def _slot_device_names(plan) -> List[List[str]]:
+    """Per-slot member device names for a legacy Plan or a PlanIR."""
+    if isinstance(plan, PlanIR):
+        return [[plan.device_names[n] for n in np.flatnonzero(row)]
+                for row in plan.member]
+    return [[d.name for d in g.devices] for g in plan.groups]
+
+
+def sample_failure_masks(plan, n_failed: int, trials: int,
                          rng: np.random.Generator) -> np.ndarray:
     """Draw `trials` random n_failed-device deletions; returns the (T, K)
     arrived mask per trial (a slot arrives while any replica survives).
     Consumes the generator exactly like the seed per-trial loop."""
-    all_devices = [d.name for g in plan.groups for d in g.devices]
+    slots = _slot_device_names(plan)
+    all_devices = [n for names in slots for n in names]
     masks = np.zeros((trials, plan.K), bool)
     for t in range(trials):
         down = set(rng.choice(all_devices,
                               size=min(n_failed, len(all_devices)),
                               replace=False))
-        for slot, g in enumerate(plan.groups):
-            masks[t, slot] = any(d.name not in down for d in g.devices)
+        for slot, names in enumerate(slots):
+            masks[t, slot] = any(n not in down for n in names)
     return masks
 
 
-def accuracy_under_failures(plan: Plan, accuracy_fn: Callable[[np.ndarray], float],
+def accuracy_under_failures(plan, accuracy_fn: Callable[[np.ndarray], float],
                             n_failed: int, trials: int = 30, seed: int = 0
                             ) -> float:
     """Paper Fig. 5/6: randomly delete `n_failed` devices, zero the portions

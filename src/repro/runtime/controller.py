@@ -1,0 +1,344 @@
+"""Online cluster controller: failure events → incremental repair replanning.
+
+RoCoIn's headline claim is resilience, but the original pipeline treated
+failure handling as an offline recompute: ``failures.replan()`` rebuilt the
+whole Algorithm-1 plan from scratch and ``QuorumServer.remove_device``
+silently left emptied groups missing quorum forever. ``ClusterController``
+makes failure handling a first-class runtime loop over the canonical
+:class:`~repro.core.plan_ir.PlanIR`:
+
+  1. consume :class:`~repro.runtime.failures.FailureInjector` events (or any
+     down-device set) via :meth:`step` / :meth:`observe`,
+  2. when a group loses quorum (no live replica), perform *incremental local
+     repair*: spare devices — unassigned ones, or live members of groups that
+     keep a live replica after donating — are matched to the broken slots by
+     a residual Hungarian assignment on the precomputed Eq. 1a latency
+     matrix, warm-started with each slot's current student; only touched
+     groups re-pick students,
+  3. fall back to a full Algorithm-1 replan (:func:`planner.tune_d_th_ir` on
+     the live fleet) when repair is infeasible, remapping distilled students
+     one-to-one via :func:`failures.remap_students`,
+  4. migrate an attached live :class:`~repro.runtime.serving.QuorumServer`
+     in place — slots whose knowledge partition is untouched keep their
+     jit-compiled portion forwards.
+
+Incremental repair never changes partitions, so it re-jits nothing and
+redeploys only the moved donor replicas; a full replan generally reshapes
+every partition and redeploys most of the fleet. ``benchmarks/plan_scale.py``
+and ``tests/test_controller.py`` quantify the gap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import assignment as ASG
+from repro.core import planner as PL
+from repro.core.plan_ir import PlanIR
+from repro.runtime.failures import remap_students
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairOutcome:
+    """One repair action taken (or proposed) by the controller."""
+    kind: str                         # "repair" | "full_replan" | "noop"
+    ir: PlanIR                        # the plan after the action
+    mapping: Dict[int, int]           # new slot -> old slot (student reuse)
+    touched_slots: Tuple[int, ...]    # slots whose membership/student changed
+    rejitted_slots: Tuple[int, ...]   # slots whose partition mask changed
+    redeployed: int                   # (device, slot) placements that changed
+    moved_devices: Tuple[str, ...]
+    feasible: bool
+    objective: float                  # live Eq. 1a objective after the action
+    wall_s: float
+
+
+class ClusterController:
+    """Event loop turning failure signals into plan repairs.
+
+    Parameters
+    ----------
+    ir:        the canonical plan to govern (device/student catalogues,
+               membership, partitions, Eq. 1a matrix — everything repair
+               needs travels inside the IR).
+    server:    optional live ``QuorumServer``; every applied outcome migrates
+               it in place (untouched portion forwards keep their jit).
+    injector:  optional ``FailureInjector`` driving :meth:`step`/:meth:`run`.
+    force_full: disable incremental repair (full replan on every event) —
+               the comparison baseline used by benchmarks and tests.
+    """
+
+    def __init__(self, ir: PlanIR, *, server=None, injector=None,
+                 seed: int = 0, force_full: bool = False,
+                 require_feasible: bool = True):
+        self.ir = ir.validate()
+        self.server = server
+        self.injector = injector
+        self.seed = seed
+        self.force_full = force_full
+        self.require_feasible = require_feasible
+        self.down: Set[str] = set()
+        self.history: List[RepairOutcome] = []
+
+    # -- event intake --------------------------------------------------------
+
+    def step(self) -> Optional[RepairOutcome]:
+        """Advance the injector one tick and react to the new down-set."""
+        return self.observe(self.injector.tick())
+
+    def run(self, ticks: int) -> List[RepairOutcome]:
+        """Drive `ticks` injector ticks; returns the non-noop outcomes."""
+        out = []
+        for _ in range(ticks):
+            o = self.step()
+            if o is not None:
+                out.append(o)
+        return out
+
+    def observe(self, down_names: Sequence[str]) -> Optional[RepairOutcome]:
+        """React to a new set of transiently-down devices. Returns the
+        applied outcome, or None when every slot still holds quorum."""
+        down = set(down_names)
+        if down == self.down:
+            return None
+        self.down = down
+        alive = self.ir.alive_mask(down)
+        if self.ir.quorum(alive).all():
+            return None
+        return self._rebuild(alive)
+
+    def permanent_loss(self, name: str) -> Optional[RepairOutcome]:
+        """Remove a device from the fleet outright, then restore quorum.
+        Returns the applied outcome (a noop outcome when the loss broke no
+        group — the attached server still adopts the shrunken plan)."""
+        self.ir = self.ir.drop_device(name)
+        self.down.discard(name)
+        alive = self.ir.alive_mask(self.down)
+        if self.ir.quorum(alive).all():
+            # quorum intact, but the loss may still have pushed a surviving
+            # group past the Eq. 1f outage target — report that honestly
+            feasible = bool(
+                (self.ir.group_outage(alive) <= self.ir.p_th).all())
+            out = RepairOutcome(
+                kind="noop", ir=self.ir,
+                mapping={k: k for k in range(self.ir.K)},
+                touched_slots=(), rejitted_slots=(), redeployed=0,
+                moved_devices=(), feasible=feasible,
+                objective=self.ir.objective(alive), wall_s=0.0)
+            self._apply(out)
+            return out
+        return self._rebuild(alive)
+
+    # -- repair planning -----------------------------------------------------
+
+    def _rebuild(self, alive: np.ndarray) -> RepairOutcome:
+        out = None if self.force_full else self.plan_repair(alive)
+        if out is None:
+            out = self.plan_full(alive)
+        self._apply(out)
+        return out
+
+    def _apply(self, out: RepairOutcome) -> None:
+        self.ir = out.ir
+        if self.server is not None:
+            self.server.migrate(out.ir, out.mapping)
+        self.history.append(out)
+
+    def plan_repair(self, alive: np.ndarray) -> Optional[RepairOutcome]:
+        """Incremental local repair: fill quorum-less slots with spare donor
+        devices via a residual Hungarian on the Eq. 1a matrix, warm-started
+        from the current plan. Partitions (and therefore portion forwards)
+        are untouched; only donor sources and repaired slots re-pick
+        students. Returns None when repair is infeasible."""
+        t0 = time.perf_counter()
+        ir = self.ir
+        N = ir.N
+        live = ir.member & alive[None, :]
+        broken = np.flatnonzero(~live.any(axis=1))
+        if not len(broken) or not N:
+            return None
+        assigned = ir.member.any(axis=0)
+        slot_of = np.where(assigned, ir.member.argmax(axis=0), -1)
+        live_counts = live.sum(axis=1)
+        dev_idx = np.arange(N)
+        in_slot_live = (slot_of >= 0) & live[np.maximum(slot_of, 0), dev_idx]
+
+        # residual cost: latency of each broken slot's warm-start student on
+        # each device; ∞ when the student does not fit the device's memory
+        stu = ir.student_of[broken]
+        params = ir.student_caps[:, 1]
+        c_mem = ir.device_caps[:, 1]
+        warm_lat = np.where(stu[:, None] >= 0,
+                            ir.latency_nd[np.maximum(stu, 0)],
+                            ir.latency_nd.min(axis=0)[None, :])   # (B, N)
+        warm_par = np.where(stu >= 0, params[np.maximum(stu, 0)],
+                            params.min())                          # (B,)
+        cost = np.where(warm_par[:, None] <= c_mem[None, :], warm_lat, np.inf)
+
+        # donor pool: unassigned live devices freely; members of a slot only
+        # while the source keeps a live replica AND its live Eq. 1f outage
+        # stays within p_th after the donation (removing a replica can only
+        # raise the outage product, so any subset of this prefix is safe too)
+        donors: List[int] = [int(n) for n in dev_idx
+                             if alive[n] and slot_of[n] < 0]
+        p_out_all = ir.device_caps[:, 3]
+        min_cost = cost.min(axis=0)
+        for k in range(ir.K):
+            if k in broken:
+                continue
+            members = [int(n) for n in dev_idx if in_slot_live[n]
+                       and slot_of[n] == k]
+            members.sort(key=lambda n: min_cost[n])
+            remaining = float(np.prod([p_out_all[n] for n in members]))
+            for n in members[:-1]:           # always keep one live replica
+                without = remaining / max(p_out_all[n], 1e-12)
+                if without > ir.p_th:
+                    break
+                donors.append(n)
+                remaining = without
+        B = len(broken)
+        if len(donors) < B:
+            return None
+        # prune to the most promising donors to keep the matching tiny
+        donors.sort(key=lambda n: min_cost[n])
+        donors = donors[:max(4 * B + 8, B)]
+        D = len(donors)
+
+        # residual Hungarian: donors × broken slots, maximizing 1/(1+latency)
+        n_sq = max(D, B)
+        W = np.zeros((n_sq, n_sq))
+        Cd = cost[:, donors]                                       # (B, D)
+        W[:D, :B] = np.where(np.isfinite(Cd.T), 1.0 / (1.0 + Cd.T), 0.0)
+        cols = ASG.hungarian(W)
+        picks: Dict[int, int] = {}
+        for r in range(D):
+            b = int(cols[r])
+            if b < B and np.isfinite(Cd[b, r]):
+                picks[b] = donors[r]
+        if len(picks) < B:
+            return None                      # some slot found no viable donor
+
+        used = set(picks.values())
+        new_member = np.array(ir.member)
+        moved: List[str] = []
+        for b, d in picks.items():
+            src = int(slot_of[d])
+            if src >= 0:
+                new_member[src, d] = False
+            new_member[int(broken[b]), d] = True
+            moved.append(ir.device_names[d])
+        # reliability top-up (Eq. 1f on live members) with leftover donors
+        p_out = ir.device_caps[:, 3]
+        leftovers = [d for d in donors if d not in used]
+        for bi, b in enumerate(broken):
+            def live_outage() -> float:
+                m = new_member[b] & alive
+                return float(np.where(m, p_out, 1.0).prod())
+            while live_outage() > ir.p_th and leftovers:
+                best = min((d for d in leftovers if np.isfinite(cost[bi, d])),
+                           key=lambda d: cost[bi, d], default=None)
+                if best is None:
+                    break
+                src = int(slot_of[best])
+                if src >= 0:
+                    new_member[src, best] = False
+                new_member[b, best] = True
+                moved.append(ir.device_names[best])
+                used.add(best)
+                leftovers.remove(best)
+
+        # repair is placement-only: every touched slot keeps its deployed
+        # student (the donor cost matrix already enforced the warm-start
+        # student fits the matched donors, and a donor source only shrinks,
+        # so its student still fits). Re-plan metrics therefore describe
+        # exactly what the live server serves. Only student-LESS slots pick
+        # a student — they had nothing deployed to keep.
+        touched = sorted({int(b) for b in broken}
+                         | {int(slot_of[d]) for d in used if slot_of[d] >= 0})
+        new_student_of = np.array(ir.student_of)
+        empty = [k for k in touched if new_student_of[k] < 0]
+        if empty:
+            sizes = ir.partition_sizes()
+            e_idx = np.asarray(empty, np.int64)
+            best_s, _ = ASG.select_students(new_member[e_idx], ir.device_caps,
+                                            ir.student_caps, sizes[e_idx],
+                                            ir.latency_nd)
+            diag = best_s[np.arange(len(empty)), np.arange(len(empty))]
+            if (diag < 0).any():
+                return None
+            new_student_of[e_idx] = diag
+
+        new_ir = ir.with_(member=new_member, student_of=new_student_of)
+        live_out = new_ir.group_outage(alive)
+        # Eq. 1f must hold for EVERY touched slot — repaired groups and the
+        # donor sources alike (a donation may not degrade its source)
+        feasible = bool(new_ir.quorum(alive).all()
+                        and (live_out[np.asarray(touched, np.int64)]
+                             <= ir.p_th).all())
+        if not new_ir.quorum(alive).all():
+            return None
+        if self.require_feasible and not feasible:
+            return None                      # let the full replan restore 1f
+        return RepairOutcome(
+            kind="repair", ir=new_ir,
+            mapping={k: k for k in range(new_ir.K)},
+            touched_slots=tuple(touched), rejitted_slots=(),
+            redeployed=len(used), moved_devices=tuple(moved),
+            feasible=feasible, objective=new_ir.objective(alive),
+            wall_s=time.perf_counter() - t0)
+
+    def plan_full(self, alive: np.ndarray) -> RepairOutcome:
+        """Fallback: full Algorithm-1 replan (tune_d_th sweep) on the live
+        fleet, embedded back onto the full device axis; distilled students
+        redeploy via one-to-one remap_students."""
+        t0 = time.perf_counter()
+        ir = self.ir
+        devs = [d for i, d in enumerate(ir.devices()) if alive[i]]
+        small = PL.tune_d_th_ir(devs, ir.A, ir.students(), p_th=ir.p_th,
+                                seed=self.seed) if devs else None
+        if small is None or small.K == 0:
+            return RepairOutcome(
+                kind="full_replan", ir=ir,
+                mapping={k: k for k in range(ir.K)}, touched_slots=(),
+                rejitted_slots=(), redeployed=0, moved_devices=(),
+                feasible=False, objective=float("inf"),
+                wall_s=time.perf_counter() - t0)
+        col = {n: i for i, n in enumerate(ir.device_names)}
+        member_full = np.zeros((small.K, ir.N), bool)
+        for k in range(small.K):
+            for j in np.flatnonzero(small.member[k]):
+                member_full[k, col[small.device_names[j]]] = True
+        new_ir = ir.with_(member=member_full, partition=small.partition,
+                          student_of=small.student_of,
+                          group_idx=small.group_idx, d_th=small.d_th)
+        mapping = remap_students(ir, new_ir)
+        rejit = tuple(
+            k for k in range(new_ir.K)
+            if mapping.get(k, k) >= ir.K
+            or not (new_ir.partition[k] == ir.partition[mapping.get(k, k)]).all())
+        # redeployments: devices newly placed, or whose knowledge partition
+        # changed (their replica must receive different student weights)
+        old_assigned = ir.member.any(axis=0)
+        old_slot = np.where(old_assigned, ir.member.argmax(axis=0), -1)
+        new_assigned = member_full.any(axis=0)
+        new_slot = np.where(new_assigned, member_full.argmax(axis=0), -1)
+        redeployed = 0
+        for n in range(ir.N):
+            if not new_assigned[n]:
+                continue
+            if not old_assigned[n]:
+                redeployed += 1
+            elif not (new_ir.partition[new_slot[n]]
+                      == ir.partition[old_slot[n]]).all():
+                redeployed += 1
+        moved = tuple(ir.device_names[n] for n in range(ir.N)
+                      if new_assigned[n] and new_slot[n] != old_slot[n])
+        return RepairOutcome(
+            kind="full_replan", ir=new_ir, mapping=mapping,
+            touched_slots=tuple(range(new_ir.K)), rejitted_slots=rejit,
+            redeployed=redeployed, moved_devices=moved,
+            feasible=small.feasible, objective=new_ir.objective(alive),
+            wall_s=time.perf_counter() - t0)

@@ -101,16 +101,42 @@ def replan(devices: Sequence[Device], A: np.ndarray,
     return PL.make_plan(devices, A, students, d_th=d_th, p_th=p_th, seed=seed)
 
 
-def remap_students(old_plan: PL.Plan, new_plan: PL.Plan) -> Dict[int, int]:
+def _filter_sets(plan) -> List[set]:
+    """Per-slot filter index sets for a legacy Plan or a canonical PlanIR."""
+    from repro.core.plan_ir import PlanIR
+    if isinstance(plan, PlanIR):
+        return [set(np.flatnonzero(row).tolist()) for row in plan.partition]
+    return [set(np.asarray(g.filters).tolist()) for g in plan.groups]
+
+
+def remap_students(old_plan, new_plan) -> Dict[int, int]:
     """Map new partition slots → old partition slots by maximum filter-set
-    overlap, so already-distilled students redeploy without retraining."""
+    overlap, so already-distilled students redeploy without retraining.
+
+    The matching is ONE-TO-ONE via the Hungarian algorithm on the overlap
+    matrix — the previous greedy argmax could deploy the same old student to
+    several new slots, silently dropping distilled knowledge. Accepts legacy
+    ``Plan`` or ``PlanIR`` on either side. When there are more new slots
+    than old students a perfect matching is impossible; the surplus slots
+    fall back to their best-overlap old student (documented duplication)."""
+    from repro.core.assignment import hungarian
+    new_sets = _filter_sets(new_plan)
+    old_sets = _filter_sets(old_plan)
+    Kn, Ko = len(new_sets), len(old_sets)
+    if Kn == 0:
+        return {}
+    if Ko == 0:
+        return {ni: 0 for ni in range(Kn)}
+    O = np.zeros((Kn, Ko))
+    for ni, ns in enumerate(new_sets):
+        for oi, os_ in enumerate(old_sets):
+            O[ni, oi] = len(ns & os_)
+    n = max(Kn, Ko)
+    W = np.zeros((n, n))
+    W[:Kn, :Ko] = O
+    cols = hungarian(W)
     mapping = {}
-    for ni, ng in enumerate(new_plan.groups):
-        best, best_ov = 0, -1
-        nset = set(ng.filters.tolist())
-        for oi, og in enumerate(old_plan.groups):
-            ov = len(nset & set(og.filters.tolist()))
-            if ov > best_ov:
-                best, best_ov = oi, ov
-        mapping[ni] = best
+    for ni in range(Kn):
+        oi = int(cols[ni])
+        mapping[ni] = oi if oi < Ko else int(np.argmax(O[ni]))
     return mapping

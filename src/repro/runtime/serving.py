@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.grouping import Device
+from repro.core.plan_ir import PlanIR
 from repro.core.planner import Plan
 from repro.core.simulator import FailureModel, plan_arrays, reduce_trials
 from repro.kernels import ops as K
@@ -53,7 +54,7 @@ class ServeResult:
 
 @dataclasses.dataclass
 class QuorumServer:
-    plan: Plan
+    plan: Any                     # planner.Plan or the canonical PlanIR
     portion_fns: List[Callable[[jnp.ndarray], jnp.ndarray]]  # per partition
     fc_weights: jnp.ndarray       # (K, Dk, C) padded per-partition FC slices
     fc_bias: jnp.ndarray          # (C,)
@@ -61,23 +62,41 @@ class QuorumServer:
     failure: Any = dataclasses.field(default_factory=FailureModel)
     rng: np.random.Generator = dataclasses.field(
         default_factory=lambda: np.random.default_rng(0))
-    _jitted: Optional[List[Callable]] = dataclasses.field(
+    _jitted: Optional[List[Optional[Callable]]] = dataclasses.field(
         default=None, init=False, repr=False)
     _arrays: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _ir: Optional[PlanIR] = dataclasses.field(
+        default=None, init=False, repr=False)
+    last_migration: Optional[Dict] = dataclasses.field(
         default=None, init=False, repr=False)
 
     # -- compiled state ------------------------------------------------------
 
     @property
     def jitted_portions(self) -> List[Callable]:
-        """Portion forwards, jit'd once and reused for every request."""
+        """Portion forwards, jit'd once and reused for every request.
+        Slots invalidated by a migration (None entries) re-jit lazily;
+        untouched slots keep their compiled function."""
         if self._jitted is None:
-            self._jitted = [jax.jit(fn) for fn in self.portion_fns]
+            self._jitted = [None] * len(self.portion_fns)
+        for i, fn in enumerate(self._jitted):
+            if fn is None:
+                self._jitted[i] = jax.jit(self.portion_fns[i])
         return self._jitted
 
     @property
+    def ir(self) -> PlanIR:
+        """Canonical array-backed view of the current plan."""
+        if isinstance(self.plan, PlanIR):
+            return self.plan
+        if self._ir is None:
+            self._ir = PlanIR.from_plan(self.plan)
+        return self._ir
+
+    @property
     def arrays(self):
-        """Cached PlanArrays view of the plan (rebuilt after remove_device)."""
+        """Cached PlanArrays view of the plan (rebuilt after migrations)."""
         if self._arrays is None:
             self._arrays = plan_arrays(self.plan)
         return self._arrays
@@ -143,14 +162,75 @@ class QuorumServer:
 
     # -- elastic re-planning -------------------------------------------------
 
-    def remove_device(self, name: str) -> None:
-        """Permanent loss: drop the device; empty groups keep their partition
-        but will always miss quorum until replan_on() is called."""
-        for g in self.plan.groups:
-            g.devices = [d for d in g.devices if d.name != name]
+    def migrate(self, new_ir: PlanIR, mapping: Optional[Dict[int, int]] = None
+                ) -> Dict:
+        """Adopt a new plan without re-jitting untouched portion forwards.
+
+        `mapping` maps NEW slot → OLD slot (e.g. from
+        :func:`repro.runtime.failures.remap_students`); identity by default.
+        A slot whose knowledge-partition mask is unchanged keeps its compiled
+        portion forward and FC slice; a slot whose mask changed reuses the
+        mapped slot's distilled student (placement-only redeployment, no
+        retraining) but is re-jitted lazily. Returns and stores migration
+        stats: ``{"rejitted_slots", "reused_slots"}``."""
+        old_ir = self.ir
+        old_count = len(self.portion_fns)
+        K_new = new_ir.K
+        if mapping is None:
+            mapping = {k: k for k in range(min(K_new, old_ir.K))}
+        old_jit = self._jitted or [None] * old_count
+        new_fns, new_jit, fc_rows, rejit = [], [], [], []
+        for k in range(K_new):
+            src = mapping.get(k, k)
+            src = min(max(int(src), 0), old_count - 1)
+            same_mask = (src < old_ir.K
+                         and new_ir.partition.shape[1] == old_ir.partition.shape[1]
+                         and bool((new_ir.partition[k] == old_ir.partition[src]).all()))
+            new_fns.append(self.portion_fns[src])
+            new_jit.append(old_jit[src] if same_mask else None)
+            if not same_mask:
+                rejit.append(k)
+            fc_rows.append(src)
+        self.portion_fns = new_fns
+        self._jitted = new_jit
+        self.fc_weights = self.fc_weights[jnp.asarray(fc_rows, jnp.int32)]
+        self.plan = new_ir
+        self._ir = new_ir
         self._arrays = None
+        self.last_migration = {"rejitted_slots": tuple(rejit),
+                               "reused_slots": K_new - len(rejit)}
+        return self.last_migration
+
+    def remove_device(self, name: str, *, repair: bool = True):
+        """Permanent loss. With ``repair=True`` (default) the loss routes
+        through :class:`repro.runtime.controller.ClusterController`: groups
+        that lost quorum are repaired incrementally (donor devices moved in,
+        full Algorithm-1 replan as fallback) and this server migrates onto
+        the repaired plan in place. Returns the controller's
+        ``RepairOutcome`` — ``kind == "noop"`` when the loss broke no group
+        (the server still adopts the shrunken plan).
+
+        ``repair=False`` restores the legacy drop-only behaviour (returns
+        ``None``) — the partition of an emptied group then permanently
+        misses quorum."""
+        if not repair:
+            if isinstance(self.plan, PlanIR):
+                self.plan = self.plan.drop_device(name)
+                self._ir = self.plan
+            else:
+                for g in self.plan.groups:
+                    g.devices = [d for d in g.devices if d.name != name]
+                self._ir = None
+            self._arrays = None
+            return None
+        from repro.runtime.controller import ClusterController
+        ctl = ClusterController(self.ir, server=self)
+        return ctl.permanent_loss(name)
 
     def live_devices(self) -> List[Device]:
+        if isinstance(self.plan, PlanIR):
+            devs = self.plan.devices()
+            return [devs[n] for n in np.flatnonzero(self.plan.member.any(0))]
         return [d for g in self.plan.groups for d in g.devices]
 
 
@@ -176,7 +256,7 @@ def server_from_ensemble(ens, deadline: float = float("inf"),
         return fn
 
     return QuorumServer(
-        plan=ens.plan,
+        plan=getattr(ens, "ir", None) or ens.plan,
         portion_fns=[make_fn(i) for i in range(Kp)],
         fc_weights=jnp.asarray(weights),
         fc_bias=jnp.asarray(ens.fc["bias"]),

@@ -1,0 +1,273 @@
+"""ClusterController: incremental repair vs full replanning, live
+QuorumServer migration, the remove_device regression, and the one-to-one
+remap_students fix. All seeded — part of the CI fast lane."""
+import numpy as np
+import pytest
+
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.plan_ir import PlanIR
+from repro.core.simulator import FailureModel
+from repro.runtime.controller import ClusterController, RepairOutcome
+from repro.runtime.failures import (FailureInjector, markov_flap_schedule,
+                                    remap_students)
+
+
+def _students():
+    return [
+        StudentArch("small", flops=5e6, params=0.6e6, out_bytes=64, capacity=0.15e6),
+        StudentArch("mid", flops=2e7, params=1.5e6, out_bytes=64, capacity=0.4e6),
+        StudentArch("big", flops=5e7, params=3.5e6, out_bytes=64, capacity=1.2e6),
+    ]
+
+
+def _graph(m=16, seed=0):
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.normal(size=(m, m)))
+    A = 0.5 * (A + A.T)
+    np.fill_diagonal(A, 0)
+    return A
+
+
+def _fleet(n, seed=2):
+    return SIM.make_fleet(n, seed=seed, mem_range=(1.0e6, 4e6))
+
+
+def _toy_server(failure=None):
+    import jax.numpy as jnp
+    from repro.runtime.serving import QuorumServer
+    st = StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)
+    groups = [
+        PL.GroupPlan(0, [Device("a", 1e7, 2e6, 500, 0.3),
+                         Device("b", 2e7, 2e6, 500, 0.3)], 0,
+                     np.arange(4), st),
+        PL.GroupPlan(1, [Device("c", 1e7, 2e6, 500, 0.3),
+                         Device("d", 3e7, 2e6, 500, 0.3)], 1,
+                     np.arange(4, 8), st),
+    ]
+    plan = PL.Plan(groups, np.zeros((8, 8)), 1.0, 0.5)
+    Dk, C = 4, 3
+    W = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, Dk, C)).astype(np.float32))
+    b = jnp.asarray(np.arange(C, dtype=np.float32))
+    fns = [lambda x: x @ jnp.ones((x.shape[-1], Dk), jnp.float32),
+           lambda x: x @ (2 * jnp.ones((x.shape[-1], Dk), jnp.float32))]
+    return QuorumServer(plan, fns, W, b,
+                        failure=failure or FailureModel(outages=False))
+
+
+# -- remove_device regression (satellite #1) ---------------------------------
+
+def test_remove_device_repairs_instead_of_dead_group():
+    """Permanently losing BOTH replicas of a group used to leave its
+    partition missing quorum forever; it now routes through controller
+    repair and a donor replica restores it."""
+    import jax.numpy as jnp
+    srv = _toy_server()
+    x = jnp.asarray(np.ones((2, 5), np.float32))
+    srv.remove_device("a")
+    out = srv.remove_device("b")
+    assert out is not None and out.kind == "repair"
+    assert srv.ir.quorum().all()
+    res = srv.serve(x)
+    assert res.arrived.all() and not res.degraded
+    # the repair moved one replica out of the healthy group, kept quorum there
+    assert {n for n in srv.ir.device_names} == {"c", "d"}
+    assert srv.ir.member.sum() == 2
+
+
+def test_remove_device_legacy_flag_preserves_old_behaviour():
+    import jax.numpy as jnp
+    srv = _toy_server()
+    x = jnp.asarray(np.ones((2, 5), np.float32))
+    srv.remove_device("a", repair=False)
+    srv.remove_device("b", repair=False)
+    res = srv.serve(x)
+    assert res.degraded and not res.arrived[0]   # the old dead-group hole
+
+
+def test_remove_device_noop_when_quorum_survives():
+    srv = _toy_server()
+    out = srv.remove_device("a")
+    assert out is not None and out.kind == "noop"
+    assert srv.ir.quorum().all()
+    assert "a" not in srv.ir.device_names
+
+
+# -- migration keeps compiled state -------------------------------------------
+
+def test_migrate_reuses_jitted_portions_for_untouched_slots():
+    srv = _toy_server()
+    jitted_before = list(srv.jitted_portions)
+    ir = srv.ir
+    # membership-only change (swap the two groups' devices): partitions
+    # untouched → no re-jit
+    new_member = np.array(ir.member)[::-1]
+    stats = srv.migrate(ir.with_(member=new_member))
+    assert stats["rejitted_slots"] == ()
+    assert srv.jitted_portions[0] is jitted_before[0]
+    assert srv.jitted_portions[1] is jitted_before[1]
+    # partition change on slot 0 → exactly that slot re-jits
+    new_part = np.array(ir.partition)
+    new_part[0] = ~new_part[0]
+    stats = srv.migrate(srv.ir.with_(partition=new_part))
+    assert stats["rejitted_slots"] == (0,)
+    assert srv.jitted_portions[1] is jitted_before[1]
+
+
+# -- remap_students one-to-one fix (satellite #2) -----------------------------
+
+def test_remap_students_is_one_to_one():
+    """Greedy max-overlap used to map several new slots to the same old
+    student when one old partition dominated the overlaps."""
+    st = _students()[0]
+
+    def plan_with_parts(parts):
+        groups = [PL.GroupPlan(i, [Device(f"d{i}", 1e7, 2e6, 500, 0.2)], i,
+                               np.asarray(p, np.int64), st)
+                  for i, p in enumerate(parts)]
+        return PL.Plan(groups, np.zeros((8, 8)), 1.0, 0.5)
+
+    old = plan_with_parts([[0, 1, 2, 3, 4, 5], [6], [7]])
+    new = plan_with_parts([[0, 1, 2], [3, 4, 5], [6, 7]])
+    mapping = remap_students(old, new)
+    assert set(mapping.keys()) == {0, 1, 2}
+    assert len(set(mapping.values())) == 3       # one-to-one (greedy gave 0,0,x)
+    # works on PlanIR inputs too
+    mapping_ir = remap_students(PlanIR.from_plan(old), PlanIR.from_plan(new))
+    assert mapping_ir == mapping
+
+
+# -- incremental repair vs full replan (satellite #4 / acceptance) ------------
+
+def _controller_setup(n=24, m=16, p_th=0.3, seed=2):
+    A = _graph(m)
+    S = _students()
+    fleet = _fleet(n, seed=seed)
+    ir = PL.tune_d_th_ir(fleet, A, S, p_th=p_th, seed=0)
+    assert ir is not None and ir.feasible
+    return ir
+
+
+def test_repair_restores_quorum_and_stays_near_full_replan_objective():
+    ir = _controller_setup()
+    names = list(ir.device_names)
+    events = markov_flap_schedule(names, 0.15, 0.4, 40,
+                                  np.random.default_rng(9))
+    ctl = ClusterController(ir, injector=FailureInjector(events), seed=0)
+    checked = 0
+    for _ in range(40):
+        down = ctl.injector.tick()
+        alive = ctl.ir.alive_mask(down)
+        if ctl.ir.quorum(alive).all():
+            ctl.down = set(down)
+            continue
+        rep = ctl.plan_repair(alive)
+        full = ctl.plan_full(alive)
+        if rep is not None:
+            checked += 1
+            assert rep.kind == "repair"
+            assert rep.ir.quorum(alive).all()          # quorum restored
+            assert rep.feasible
+            assert rep.rejitted_slots == ()            # partitions untouched
+            # Eq. 1a objective within tolerance of the from-scratch replan
+            assert rep.objective <= 1.5 * full.objective + 1e-9
+            ctl.down = set(down)
+            ctl.ir = rep.ir
+        else:
+            ctl.down = set(down)
+            ctl.ir = full.ir
+    assert checked >= 3          # the schedule actually exercised repair
+
+
+def test_repair_is_strictly_cheaper_than_full_replan():
+    """Seeded end-to-end acceptance run: under the same Markov-flap schedule
+    the repair controller re-jits and redeploys strictly less, and spends
+    strictly less planning wall-clock, than forced full replanning."""
+    def run(force_full):
+        ir = _controller_setup()
+        events = markov_flap_schedule(list(ir.device_names), 0.15, 0.4, 60,
+                                      np.random.default_rng(17))
+        ctl = ClusterController(ir, injector=FailureInjector(events),
+                                force_full=force_full, seed=0)
+        outs = []
+        for _ in range(60):
+            o = ctl.step()
+            if o is None:
+                continue
+            outs.append(o)
+            # quorum restored under the down-set current at this tick
+            assert o.ir.quorum(o.ir.alive_mask(ctl.down)).all()
+        assert outs, "schedule produced no quorum losses"
+        return ctl, outs
+
+    ctl_r, rep = run(False)
+    ctl_f, full = run(True)
+    n_repairs = sum(o.kind == "repair" for o in rep)
+    assert n_repairs > 0
+    assert all(o.feasible for o in rep)
+    rejit_r = sum(len(o.rejitted_slots) for o in rep)
+    rejit_f = sum(len(o.rejitted_slots) for o in full)
+    redeploy_r = sum(o.redeployed for o in rep)
+    redeploy_f = sum(o.redeployed for o in full)
+    assert rejit_r < rejit_f                    # strictly fewer re-jits
+    assert redeploy_r < redeploy_f              # strictly fewer redeployments
+    wall_r = sum(o.wall_s for o in rep)
+    wall_f = sum(o.wall_s for o in full)
+    assert wall_r < wall_f                      # repair is cheaper wall-clock
+
+
+def test_controller_drives_live_server_under_flapping():
+    """Controller + QuorumServer end-to-end: after every applied outcome the
+    server answers with full quorum under the current down-set."""
+    import jax.numpy as jnp
+    from repro.runtime.serving import QuorumServer
+    ir = _controller_setup(n=16)
+    Kp, Dk, C = ir.K, 4, 3
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(Kp, Dk, C)).astype(np.float32))
+    b = jnp.asarray(np.zeros(C, np.float32))
+    fns = [(lambda k: lambda x: x @ ((k + 1.0) * jnp.ones(
+        (x.shape[-1], Dk), jnp.float32)))(k) for k in range(Kp)]
+    srv = QuorumServer(ir, fns, W, b, failure=FailureModel(outages=False))
+    events = markov_flap_schedule(list(ir.device_names), 0.12, 0.4, 30,
+                                  np.random.default_rng(23))
+    ctl = ClusterController(ir, server=srv, injector=FailureInjector(events),
+                            seed=0)
+    x = jnp.asarray(np.ones((2, 5), np.float32))
+    acted = 0
+    for _ in range(30):
+        out = ctl.step()
+        if out is None:
+            continue
+        acted += 1
+        srv.failure = FailureModel(forced_failures=sorted(ctl.down),
+                                   outages=False)
+        res = srv.serve(x)
+        assert res.arrived.all(), f"quorum hole after {out.kind}"
+    assert acted > 0
+    assert srv.ir is ctl.ir                     # server follows the controller
+
+
+def test_permanent_loss_sequence_keeps_serving():
+    ir = _controller_setup(n=12)
+    ctl = ClusterController(ir, seed=0)
+    names = list(ir.device_names)
+    for victim in names[:4]:
+        out = ctl.permanent_loss(victim)
+        assert out is not None
+        assert victim not in ctl.ir.device_names
+        assert ctl.ir.quorum(ctl.ir.alive_mask(ctl.down)).all()
+
+
+def test_force_full_controller_only_full_replans():
+    ir = _controller_setup(n=16)
+    events = markov_flap_schedule(list(ir.device_names), 0.2, 0.4, 25,
+                                  np.random.default_rng(3))
+    ctl = ClusterController(ir, injector=FailureInjector(events),
+                            force_full=True, seed=0)
+    outs = ctl.run(25)
+    assert outs and all(o.kind == "full_replan" for o in outs)
+    assert isinstance(outs[0], RepairOutcome)

@@ -1,0 +1,230 @@
+"""Canonical PlanIR stack: round-trip equivalence with the legacy object
+graph at fixed seeds, vectorized grouping/assignment vs the object-path
+reference, the batched tune_d_th sweep, and the derived simulator view."""
+import numpy as np
+import pytest
+
+from repro.core import assignment as ASG
+from repro.core import grouping as GRP
+from repro.core import ncut as NC
+from repro.core import planner as PL
+from repro.core import simulator as SIM
+from repro.core.assignment import StudentArch
+from repro.core.plan_ir import PlanIR, device_matrix, eq1a_latency, student_matrix
+
+
+def _students():
+    return [
+        StudentArch("small", flops=5e6, params=0.6e6, out_bytes=64, capacity=0.15e6),
+        StudentArch("mid", flops=2e7, params=1.5e6, out_bytes=64, capacity=0.4e6),
+        StudentArch("big", flops=5e7, params=3.5e6, out_bytes=64, capacity=1.2e6),
+    ]
+
+
+def _graph(m=24, seed=0):
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.normal(size=(m, m)))
+    A = 0.5 * (A + A.T)
+    np.fill_diagonal(A, 0)
+    return A
+
+
+def _ref_make_plan(devices, A, students, d_th, p_th, seed=0, repair=False):
+    """The pre-PlanIR Algorithm 1, reassembled from the surviving object-path
+    pieces — the reference oracle for the vectorized planner."""
+    grouping = GRP.follow_the_leader(devices, d_th, p_th, seed=seed,
+                                     repair=repair)
+    parts = NC.ncut_partition(np.asarray(A), grouping.K, seed=seed)
+    K = len(parts)
+    sizes = PL.partition_sizes(A, parts)
+    matches = ASG.match_groups_to_partitions(
+        [tuple(g) for g in grouping.groups[:K]], sizes, students)
+    plans = []
+    for g_idx, p_idx, student in matches:
+        plans.append(PL.GroupPlan(g_idx, list(grouping.groups[g_idx]), p_idx,
+                                  parts[p_idx], student))
+    return PL.Plan(plans, np.asarray(A), d_th, p_th)
+
+
+def _plans_equivalent(ref: PL.Plan, new: PL.Plan):
+    rmap = {g.partition_idx: g for g in ref.groups}
+    nmap = {g.partition_idx: g for g in new.groups}
+    assert set(rmap) == set(nmap)
+    for p in rmap:
+        rg, ng = rmap[p], nmap[p]
+        assert {d.name for d in rg.devices} == {d.name for d in ng.devices}
+        assert sorted(rg.filters.tolist()) == sorted(ng.filters.tolist())
+        assert (rg.student.name if rg.student else None) == \
+               (ng.student.name if ng.student else None)
+        assert rg.group_idx == ng.group_idx
+    assert (ref.latency == new.latency
+            or np.isclose(ref.latency, new.latency)
+            or (np.isinf(ref.latency) and np.isinf(new.latency)))
+    assert ref.feasible == new.feasible
+
+
+# -- vectorized planner == object-path reference ------------------------------
+
+@pytest.mark.parametrize("seed,n", [(0, 6), (1, 9), (2, 14)])
+def test_make_plan_matches_object_reference(seed, n):
+    A = _graph()
+    S = _students()
+    fleet = SIM.make_fleet(n, seed=seed)
+    for d_th in (0.3, 1.0, 2.5):
+        for p_th in (0.05, 0.25, 0.6):
+            for repair in (False, True):
+                ref = _ref_make_plan(fleet, A, S, d_th, p_th, repair=repair)
+                new = PL.make_plan(fleet, A, S, d_th=d_th, p_th=p_th,
+                                   repair=repair)
+                _plans_equivalent(ref, new)
+
+
+def test_tune_d_th_matches_reference_sweep():
+    A = _graph()
+    S = _students()
+    fleet = SIM.make_fleet(10, seed=4)
+    for p_th in (0.1, 0.3):
+        best = None
+        for repair in (False, True):
+            for d_th in np.geomspace(0.05, 4.0, 12):
+                plan = _ref_make_plan(fleet, A, S, float(d_th), p_th,
+                                      repair=repair)
+                if not plan.groups:
+                    continue
+                if best is None:
+                    best = plan
+                    continue
+                if (not plan.feasible, plan.latency) < \
+                        (not best.feasible, best.latency):
+                    best = plan
+            if best is not None and best.feasible:
+                break
+        new = PL.tune_d_th(fleet, A, S, p_th=p_th)
+        _plans_equivalent(best, new)
+
+
+def test_grouping_arrays_matches_object_path():
+    for seed in range(4):
+        fleet = SIM.make_fleet(12, seed=seed)
+        caps = np.stack([d.capacity_vec() for d in fleet])
+        p_out = np.array([d.p_out for d in fleet])
+        for d_th in (0.2, 1.0, 3.0):
+            for p_th in (0.02, 0.3):
+                for repair in (False, True):
+                    obj = GRP.follow_the_leader(fleet, d_th, p_th,
+                                                repair=repair)
+                    arr = GRP.follow_the_leader_arrays(caps, p_out, d_th,
+                                                       p_th, repair=repair)
+                    got = [[fleet[i].name for i in g] for g in arr]
+                    want = [[d.name for d in g] for g in obj.groups]
+                    assert got == want
+
+
+def test_select_students_matches_best_student_for():
+    S = _students()
+    rng = np.random.default_rng(0)
+    fleet = SIM.make_fleet(9, seed=7)
+    names, dcaps = device_matrix(fleet)
+    snames, scaps = student_matrix(S)
+    lat = eq1a_latency(scaps, dcaps)
+    member = np.zeros((3, 9), bool)
+    member[0, [0, 1, 2]] = True
+    member[1, [3, 4]] = True
+    member[2, [5, 6, 7, 8]] = True
+    sizes = rng.dirichlet(np.ones(3))
+    best, W = ASG.select_students(member, dcaps, scaps, sizes, lat)
+    groups = [[fleet[i] for i in np.flatnonzero(member[k])] for k in range(3)]
+    for k in range(3):
+        for p in range(3):
+            student, weight = ASG.best_student_for(groups[k], sizes[p], S)
+            want = snames.index(student.name) if student else -1
+            assert best[k, p] == want
+            assert np.isclose(W[k, p], weight)
+
+
+def test_hungarian_still_matches_bruteforce_large():
+    import itertools
+    rng = np.random.default_rng(11)
+    W = rng.random((6, 6))
+    cols = ASG.hungarian(W)
+    got = W[np.arange(6), cols].sum()
+    best = max(sum(W[i, p[i]] for i in range(6))
+               for p in itertools.permutations(range(6)))
+    assert np.isclose(got, best)
+    assert sorted(cols.tolist()) == list(range(6))
+
+
+def test_ncut_partition_cache_in_tune_sweep():
+    pre = PL._Precomputed(SIM.make_fleet(8, seed=0), _graph(), _students(), 0)
+    a = pre.partitions(4)
+    b = pre.partitions(4)
+    assert a is b                      # cached per K, not recomputed
+    c = pre.partitions(5)
+    assert c is not a and len(c) == 5
+
+
+# -- round trip + derived views ----------------------------------------------
+
+def test_plan_ir_round_trip_fixed_seeds():
+    A = _graph()
+    S = _students()
+    for seed in (0, 3, 8):
+        fleet = SIM.make_fleet(10, seed=seed)
+        plan = PL.make_plan(fleet, A, S, d_th=1.0, p_th=0.25)
+        ir = PlanIR.from_plan(plan, students=S, devices=fleet)
+        back = ir.to_plan(devices=fleet, students=S)
+        _plans_equivalent(plan, back)
+        # objective / constraint views agree with the object graph
+        assert np.isclose(ir.latency, plan.latency) or \
+            (np.isinf(ir.latency) and np.isinf(plan.latency))
+        assert ir.feasible == plan.feasible
+        assert np.isclose(ir.total_params(), plan.total_params())
+        assert np.isclose(ir.valid_params(), plan.valid_params())
+        outs = ir.group_outage()
+        by_slot = {g.partition_idx: g.outage for g in plan.groups}
+        for k in range(ir.K):
+            assert np.isclose(outs[k], by_slot[k])
+
+
+def test_plan_ir_simulate_matches_plan_simulate():
+    A = _graph()
+    S = _students()
+    fleet = SIM.make_fleet(10, seed=3)
+    plan = PL.make_plan(fleet, A, S, d_th=1.0, p_th=0.25)
+    ir = PlanIR.from_plan(plan, students=S, devices=fleet)
+    for seed in (0, 5):
+        assert SIM.simulate(plan, trials=400, seed=seed) == \
+               SIM.simulate(ir, trials=400, seed=seed)
+    # loop engine accepts the IR via the object view
+    r_loop = SIM.simulate(ir, trials=50, seed=1, engine="loop")
+    assert set(r_loop) == {"mean_latency", "p99_latency", "mean_coverage",
+                           "complete_rate"}
+
+
+def test_plan_ir_frozen_and_validated():
+    A = _graph(8)
+    S = _students()
+    fleet = SIM.make_fleet(6, seed=1)
+    ir = PL.make_plan_ir(fleet, A, S, d_th=1.0, p_th=0.3)
+    with pytest.raises(ValueError):
+        ir.member[0, 0] = True         # arrays are read-only
+    ir.validate()
+    bad_member = np.array(ir.member)
+    if ir.K >= 2:
+        bad_member[1] |= bad_member[0]  # device in two groups
+        with pytest.raises(ValueError):
+            ir.with_(member=bad_member).validate()
+
+
+def test_plan_ir_drop_device():
+    A = _graph(8)
+    S = _students()
+    fleet = SIM.make_fleet(6, seed=1)
+    ir = PL.make_plan_ir(fleet, A, S, d_th=10.0, p_th=0.3)
+    victim = ir.device_names[0]
+    out = ir.drop_device(victim)
+    assert victim not in out.device_names
+    assert out.N == ir.N - 1
+    assert out.member.shape == (ir.K, ir.N - 1)
+    assert out.latency_nd.shape == (ir.S, ir.N - 1)
+    assert ir.drop_device("nonexistent") is ir
