@@ -34,6 +34,26 @@ def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def paper_students() -> List:
+    """The three-tier student zoo the planner benchmarks share; one
+    definition so plan_scale and bench_serving measure the same fleet."""
+    from repro.core.assignment import StudentArch
+    return [
+        StudentArch("small", 5e6, 0.6e6, 64, 0.15e6),
+        StudentArch("mid", 2e7, 1.5e6, 64, 0.4e6),
+        StudentArch("big", 5e7, 3.5e6, 64, 1.2e6),
+    ]
+
+
+def affinity_graph(M: int, seed: int = 0) -> np.ndarray:
+    """Synthetic filter-affinity graph with the benchmarks' shared spectrum."""
+    rng = np.random.default_rng(seed)
+    a = np.abs(rng.normal(size=(2 * M, M)))
+    A = (a.T @ a) * np.abs(a.mean(0)[:, None] - a.mean(0)[None, :])
+    np.fill_diagonal(A, 0)
+    return 0.5 * (A + A.T)
+
+
 _ENSEMBLE_CACHE: Dict = {}
 _TEACHER_CACHE: Dict = {}
 

@@ -17,33 +17,18 @@ Three sections, all ``name,us_per_call,derived`` CSV rows:
 from __future__ import annotations
 
 import time
-from typing import List
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import affinity_graph, emit, paper_students
 from repro.core import assignment as ASG
 from repro.core import grouping as GRP
 from repro.core import ncut as NC
 from repro.core import planner as PL
-from repro.core.assignment import StudentArch
 from repro.core.simulator import FailureModel, make_fleet
 
-
-def _students() -> List[StudentArch]:
-    return [
-        StudentArch("small", 5e6, 0.6e6, 64, 0.15e6),
-        StudentArch("mid", 2e7, 1.5e6, 64, 0.4e6),
-        StudentArch("big", 5e7, 3.5e6, 64, 1.2e6),
-    ]
-
-
-def _graph(M: int, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    a = np.abs(rng.normal(size=(2 * M, M)))
-    A = (a.T @ a) * np.abs(a.mean(0)[:, None] - a.mean(0)[None, :])
-    np.fill_diagonal(A, 0)
-    return 0.5 * (A + A.T)
+_students = paper_students          # shared fleet definition (benchmarks.common)
+_graph = affinity_graph
 
 
 def _fleet(n: int, seed: int = 0):

@@ -13,6 +13,11 @@ plus an optional ``deadline`` attribute (trials whose per-device latency
 ``t + delay`` exceeds it count as missed). :func:`repro.core.simulator.simulate`
 and the batched quorum server consume scenarios interchangeably with the
 plain ``FailureModel``.
+
+The module also hosts the open-loop request ARRIVAL processes
+(:class:`PoissonArrivals`, :class:`MMPPArrivals`) that feed the
+continuous-batching serving engine (:mod:`repro.runtime.engine`) —
+failure scenarios model the fleet, arrival processes model the traffic.
 """
 from __future__ import annotations
 
@@ -107,6 +112,94 @@ class MarkovLinkScenario:
         up = FailureInjector(events).alive_matrix(arrays.names, trials)
         alive, delay = self.base.sample(rng, arrays, trials)
         return alive & up, delay
+
+
+# ---------------------------------------------------------------------------
+# open-loop request arrival processes (the serving engine's traffic models)
+# ---------------------------------------------------------------------------
+
+def _sample_sizes(rng: np.random.Generator, n: int, sizes: Sequence[int],
+                  probs: Optional[Sequence[float]]) -> np.ndarray:
+    """Draw heterogeneous request sizes (rows per request)."""
+    arr = np.asarray(sizes, np.int64)
+    if len(arr) == 1:
+        return np.full(n, arr[0], np.int64)
+    p = None
+    if probs is not None:
+        p = np.asarray(probs, np.float64)
+        p = p / p.sum()
+    return rng.choice(arr, size=n, p=p)
+
+
+@dataclasses.dataclass
+class PoissonArrivals:
+    """Open-loop Poisson arrival process: exponential inter-arrival gaps at
+    ``rate`` requests/second, each request carrying a size (rows) drawn from
+    the ``sizes``/``size_probs`` categorical — the memoryless baseline
+    traffic model for the continuous-batching engine."""
+    rate: float
+    sizes: Sequence[int] = (1,)
+    size_probs: Optional[Sequence[float]] = None
+
+    def generate(self, rng: np.random.Generator, horizon: float
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """All arrivals in [0, horizon): (times (R,) sorted, sizes (R,))."""
+        if self.rate <= 0 or horizon <= 0:
+            return np.zeros(0), np.zeros(0, np.int64)
+        times = np.zeros(0, np.float64)
+        t_last = 0.0
+        while t_last < horizon:
+            n = max(int(self.rate * (horizon - t_last) * 1.5) + 16, 16)
+            gaps = rng.exponential(1.0 / self.rate, n)
+            times = np.concatenate([times, t_last + np.cumsum(gaps)])
+            t_last = float(times[-1])
+        times = times[times < horizon]
+        return times, _sample_sizes(rng, len(times), self.sizes,
+                                    self.size_probs)
+
+
+@dataclasses.dataclass
+class MMPPArrivals:
+    """Markov-modulated Poisson process (2-state MMPP): a hidden Gilbert
+    chain alternates between a calm state and a burst state, dwelling an
+    exponential time in each (``dwell`` mean seconds), and requests arrive
+    as a Poisson process at the current state's rate. The classic bursty
+    edge-traffic model — same mean load as a Poisson process of the
+    time-averaged rate but a far higher index of dispersion."""
+    rates: Tuple[float, float] = (10.0, 100.0)
+    dwell: Tuple[float, float] = (1.0, 0.25)
+    sizes: Sequence[int] = (1,)
+    size_probs: Optional[Sequence[float]] = None
+    start_state: int = 0
+
+    def mean_rate(self) -> float:
+        w = np.asarray(self.dwell, np.float64)
+        r = np.asarray(self.rates, np.float64)
+        return float((w * r).sum() / w.sum())
+
+    def generate(self, rng: np.random.Generator, horizon: float
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """All arrivals in [0, horizon): (times (R,) sorted, sizes (R,)).
+        Within each dwell segment the arrivals are the order statistics of
+        uniforms — exactly a conditional Poisson process."""
+        if min(self.dwell) <= 0:
+            raise ValueError(f"dwell means must be positive, got {self.dwell}"
+                             " (a zero dwell would never advance time)")
+        chunks: List[np.ndarray] = []
+        t, state = 0.0, int(self.start_state)
+        while t < horizon:
+            seg = float(rng.exponential(self.dwell[state]))
+            seg_end = min(t + seg, horizon)
+            lam = float(self.rates[state])
+            if lam > 0 and seg_end > t:
+                n = int(rng.poisson(lam * (seg_end - t)))
+                if n:
+                    chunks.append(np.sort(rng.uniform(t, seg_end, n)))
+            t += seg
+            state = 1 - state
+        times = (np.concatenate(chunks) if chunks else np.zeros(0))
+        return times, _sample_sizes(rng, len(times), self.sizes,
+                                    self.size_probs)
 
 
 @dataclasses.dataclass

@@ -51,6 +51,10 @@ def quorum_aggregate(portions: jnp.ndarray, weights: jnp.ndarray,
     mask: (K,) int32 (1 = portion arrived). Returns logits (B, C)."""
     K, B, Dk = portions.shape
     C = weights.shape[-1]
+    if B == 0:
+        # an empty batch would make bb = 0 and divide the grid by zero;
+        # the merge of nothing is the empty logits block
+        return jnp.zeros((0, C), jnp.float32)
     bb = min(block_batch, B)
     pad = (-B) % bb
     if pad:

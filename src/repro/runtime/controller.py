@@ -8,7 +8,9 @@ makes failure handling a first-class runtime loop over the canonical
 :class:`~repro.core.plan_ir.PlanIR`:
 
   1. consume :class:`~repro.runtime.failures.FailureInjector` events (or any
-     down-device set) via :meth:`step` / :meth:`observe`,
+     down-device set) via :meth:`step` / :meth:`observe` — or, from a
+     latency-critical serving loop, the non-blocking
+     :meth:`observe_deferred` / :meth:`poll` pair,
   2. when a group loses quorum (no live replica), perform *incremental local
      repair*: spare devices — unassigned ones, or live members of groups that
      keep a live replica after donating — are matched to the broken slots by
@@ -82,6 +84,7 @@ class ClusterController:
         self.require_feasible = require_feasible
         self.down: Set[str] = set()
         self.history: List[RepairOutcome] = []
+        self._pending: Optional[Set[str]] = None
 
     # -- event intake --------------------------------------------------------
 
@@ -97,6 +100,25 @@ class ClusterController:
             if o is not None:
                 out.append(o)
         return out
+
+    def observe_deferred(self, down_names: Sequence[str]) -> bool:
+        """Non-blocking intake for the serving hot path: record the newest
+        down-set WITHOUT planning (an O(1) set copy — safe to call from a
+        latency-critical loop). Repeated calls coalesce; only the newest set
+        survives until the next :meth:`poll`. Returns True when the recorded
+        set differs from the last applied one (a later poll may repair)."""
+        down = set(down_names)
+        self._pending = down
+        return down != self.down
+
+    def poll(self) -> Optional[RepairOutcome]:
+        """Apply the newest deferred down-set, if any. The continuous
+        -batching engine calls this between micro-batch dispatches, so repair
+        planning never blocks an in-flight batch."""
+        if self._pending is None:
+            return None
+        down, self._pending = self._pending, None
+        return self.observe(down)
 
     def observe(self, down_names: Sequence[str]) -> Optional[RepairOutcome]:
         """React to a new set of transiently-down devices. Returns the

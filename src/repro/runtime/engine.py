@@ -1,0 +1,460 @@
+"""Asynchronous continuous-batching serving engine (RoCoIn Fig. 1, §V).
+
+The :class:`QuorumServer` serves whoever calls it, one batch at a time; this
+module wraps it in the always-on engine the runtime phase needs under real
+traffic. An open-loop request queue (Poisson or MMPP-bursty arrivals from
+:mod:`repro.core.scenarios`, heterogeneous request sizes) feeds a scheduler
+that forms micro-batches under a latency-SLO budget — a batch closes when it
+reaches ``max_batch`` requests or when its oldest request has waited
+``max_wait`` seconds, whichever comes first — and dispatches each batch
+through the existing one-forward-per-partition
+:meth:`QuorumServer.serve_batch` path.
+
+Chaos stays live while traffic flows: injector ticks are delivered to the
+:class:`~repro.runtime.controller.ClusterController` through its
+non-blocking ``observe_deferred`` hook, and repairs are applied via
+``poll()`` between dispatches. The migration handoff is re-entrant — an
+in-flight batch finishes on the jitted portions it was dispatched with,
+queued requests pick up the migrated plan (each request records the
+``plan_epoch`` it was served under).
+
+Time is a virtual clock driven by an event heap, so runs are deterministic
+and arrival processes can be replayed exactly. The service time of a batch
+is either the *measured wall-clock* of its ``serve_batch`` call (the real
+systems number — jit dispatch overhead and post-migration recompiles
+included) or a deterministic ``service_model`` ``(alpha, beta)`` →
+``alpha + beta · rows`` for reproducible tests. Every micro-batch draws its
+failures from its own spawned RNG stream keyed by batch id, so outcomes are
+independent of how chaos ticks interleave with dispatches.
+
+Batches are padded to power-of-two row counts (one throwaway filler
+request) so the jitted portion forwards compile O(log max_rows) shapes
+instead of one per distinct row total.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.simulator import FailureModel
+from repro.runtime.serving import QuorumServer
+
+
+# ---------------------------------------------------------------------------
+# records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's life through the engine (virtual seconds)."""
+    rid: int
+    t_arrival: float
+    size: int                       # rows
+    t_dispatch: float = float("inf")
+    t_done: float = float("inf")
+    batch_id: int = -1
+    plan_epoch: int = 0             # migrations applied before its dispatch
+    quorum_ok: bool = False         # every partition arrived
+    degraded: bool = False
+    served_latency: float = float("nan")   # Eq. 1a quorum latency
+
+    @property
+    def latency(self) -> float:
+        """End-to-end: queue wait + batching wait + service."""
+        return self.t_done - self.t_arrival
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    bid: int
+    t_dispatch: float
+    t_done: float
+    n_requests: int
+    rows: int
+    plan_epoch: int
+    service_s: float
+
+
+@dataclasses.dataclass
+class EngineReport:
+    records: List[RequestRecord]
+    batches: List[BatchRecord]
+    migrations: List[Tuple[float, Any]]    # (virtual t, RepairOutcome)
+    slo: float
+
+    def latencies(self) -> np.ndarray:
+        return np.asarray([r.latency for r in self.records
+                           if np.isfinite(r.t_done)])
+
+    def summary(self) -> Dict[str, float]:
+        lats = self.latencies()
+        done = [r for r in self.records if np.isfinite(r.t_done)]
+        if not done:
+            return {"n": 0, "throughput": 0.0, "p50": float("inf"),
+                    "p99": float("inf"), "slo_attainment": 0.0,
+                    "quorum_rate": 0.0, "mean_batch": 0.0,
+                    "migrations": len(self.migrations)}
+        t0 = min(r.t_arrival for r in done)
+        t1 = max(r.t_done for r in done)
+        return {
+            "n": len(done),
+            "throughput": len(done) / max(t1 - t0, 1e-12),
+            "p50": float(np.percentile(lats, 50)),
+            "p99": float(np.percentile(lats, 99)),
+            "slo_attainment": float(np.mean(lats <= self.slo)),
+            "quorum_rate": float(np.mean([r.quorum_ok for r in done])),
+            "mean_batch": float(np.mean([b.n_requests for b in self.batches]))
+            if self.batches else 0.0,
+            "migrations": len(self.migrations),
+        }
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 16             # batch closes when this many requests …
+    max_wait: float = 0.02          # … or when the oldest waited this long
+    slo: float = 0.5                # end-to-end latency SLO (virtual s)
+    # concurrent in-flight micro-batches. With measured-wall service times
+    # (service_model=None) the serve_batch calls still execute serially in
+    # real time, so depth > 1 models idealized zero-contention parallel
+    # hardware — use a deterministic service_model for honest overlap.
+    pipeline_depth: int = 1
+    chaos_every: Optional[float] = None   # injector tick cadence (virtual s)
+    # (alpha, beta): service = alpha + beta · rows. None → measured wall time
+    service_model: Optional[Tuple[float, float]] = None
+    input_dim: int = 32             # request feature width
+    # pad batches to power-of-two row counts: bounds jit compiles to
+    # O(log max_rows) shapes. With bucket_rows=False warmup covers only the
+    # individual request sizes, so unseen row TOTALS still compile inside
+    # timed dispatches — disable bucketing only with a deterministic
+    # service_model (or accept compile spikes in measured latencies).
+    bucket_rows: bool = True
+    warmup: bool = True             # pre-compile before timing (wall mode)
+    seed: int = 0
+
+
+def _serial_config(cfg: EngineConfig) -> EngineConfig:
+    """The per-request ``serve()`` baseline: batch of one, no batching wait."""
+    return dataclasses.replace(cfg, max_batch=1, max_wait=0.0)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class ServingEngine:
+    """Continuous-batching front end for a :class:`QuorumServer`.
+
+    Parameters
+    ----------
+    server:     the live quorum server (its plan may migrate mid-run).
+    config:     :class:`EngineConfig`.
+    controller: optional ``ClusterController`` — chaos ticks flow through
+                its non-blocking ``observe_deferred`` hook and repairs are
+                applied via ``poll()`` between dispatches.
+    injector:   optional ``FailureInjector`` driving chaos ticks; defaults
+                to ``controller.injector``.
+    failure_for: maps the current down-set to the failure model requests are
+                sampled under at dispatch (default: forced failures, no
+                stochastic outages).
+    make_input: ``(rng, rows) -> jnp.ndarray`` request payload factory
+                (default: cached standard-normal ``(rows, input_dim)``).
+    """
+
+    def __init__(self, server: QuorumServer,
+                 config: Optional[EngineConfig] = None, *,
+                 controller=None, injector=None,
+                 failure_for: Optional[Callable[[Set[str]], Any]] = None,
+                 make_input: Optional[Callable[[np.random.Generator, int],
+                                               Any]] = None):
+        self.server = server
+        self.cfg = config or EngineConfig()
+        self.controller = controller
+        self.injector = injector if injector is not None else (
+            getattr(controller, "injector", None))
+        self._custom_failure = failure_for is not None
+        self._failure_for = failure_for or (lambda down: FailureModel(
+            forced_failures=sorted(down), outages=False))
+        self._make_input = make_input
+        self._down: Set[str] = set()
+        self._xcache: Dict[int, Any] = {}
+        self._input_rng = np.random.default_rng(self.cfg.seed + 1)
+        self.plan_epoch = 0
+        self.migrations: List[Tuple[float, Any]] = []
+
+    # -- request payloads ----------------------------------------------------
+
+    def _input(self, rows: int):
+        if rows not in self._xcache:
+            if self._make_input is not None:
+                self._xcache[rows] = self._make_input(self._input_rng, rows)
+            else:
+                # cached as numpy: serve_batch stacks requests host-side, so
+                # a jnp cache would pay a device→host copy every dispatch
+                self._xcache[rows] = self._input_rng.standard_normal(
+                    (rows, self.cfg.input_dim)).astype(np.float32)
+        return self._xcache[rows]
+
+    def _batch_rng(self, bid: int) -> np.random.Generator:
+        """Per-batch spawned stream, keyed by batch id (not spawn order), so
+        failure draws are reproducible under any event interleaving."""
+        return np.random.default_rng(
+            np.random.SeedSequence(entropy=self.cfg.seed, spawn_key=(bid,)))
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _apply_control(self, now: float) -> None:
+        """Between-dispatch control point: apply pending repairs (the
+        non-blocking half of the chaos loop) and refresh the failure model
+        to the current down-set. Without a chaos source (controller or
+        injector) or an explicit ``failure_for``, the server's own failure
+        model is left untouched."""
+        if self.controller is not None:
+            out = self.controller.poll()
+            if out is not None:
+                self.migrations.append((now, out))
+                self.plan_epoch += 1
+            down = set(self.controller.down)
+        else:
+            down = set(self._down)
+        if (self.controller is not None or self.injector is not None
+                or self._custom_failure):
+            self.server.failure = self._failure_for(down)
+
+    def _dispatch(self, now: float, reqs: List[RequestRecord],
+                  bid: int) -> Tuple[float, BatchRecord]:
+        self._apply_control(now)
+        xs = [self._input(r.size) for r in reqs]
+        rows = sum(r.size for r in reqs)
+        pad_rows = 0
+        if self.cfg.bucket_rows and rows:
+            bucket = 1 << (rows - 1).bit_length()
+            pad_rows = bucket - rows
+            if pad_rows:
+                xs = xs + [self._input(pad_rows)]   # filler request, dropped
+        t0 = time.perf_counter()
+        results = self.server.serve_batch(xs, rng=self._batch_rng(bid))
+        wall = time.perf_counter() - t0
+        if self.cfg.service_model is not None:
+            alpha, beta = self.cfg.service_model
+            service = alpha + beta * rows
+        else:
+            service = wall
+        done_t = now + service
+        for r, res in zip(reqs, results):        # filler result falls off
+            r.t_dispatch = now
+            r.t_done = done_t
+            r.batch_id = bid
+            r.plan_epoch = self.plan_epoch
+            # a complete answer needs every portion to arrive AND carry real
+            # weights — a migration-zeroed slot arriving with a zero FC
+            # slice is a degraded answer, not a quorum-complete one
+            r.quorum_ok = bool(res.arrived.all()) and not res.degraded
+            r.degraded = bool(res.degraded)
+            r.served_latency = float(res.latency)
+        batch = BatchRecord(bid, now, done_t, len(reqs), rows,
+                            self.plan_epoch, service)
+        return done_t, batch
+
+    # -- event loop ----------------------------------------------------------
+
+    def run(self, times: Sequence[float],
+            sizes: Optional[Sequence[int]] = None) -> EngineReport:
+        """Serve an open-loop arrival trace to completion (drains the queue
+        after the last arrival) and return the full report. Per-run metrics
+        (plan epochs, applied migrations) reset at entry, and the server's
+        own failure model is restored on exit — the chaos-driven forced
+        -failure models the engine installs are borrowed state."""
+        self.plan_epoch = 0
+        self.migrations = []
+        self._down = set()          # each run re-derives its own chaos state
+        saved_failure = self.server.failure
+        try:
+            return self._run(times, sizes)
+        finally:
+            self.server.failure = saved_failure
+
+    def _run(self, times, sizes) -> EngineReport:
+        times = np.asarray(times, np.float64)
+        if sizes is None:
+            sizes = np.ones(len(times), np.int64)
+        sizes = np.asarray(sizes, np.int64)
+        records = [RequestRecord(i, float(times[i]), int(sizes[i]))
+                   for i in range(len(times))]
+        if self.cfg.warmup and self.cfg.service_model is None and records:
+            self._warmup(sizes)
+
+        heap: List[Tuple[float, int, int, int]] = []
+        seq = 0
+        ARRIVE, CLOSE, DONE, CHAOS = 0, 1, 2, 3
+        for r in records:
+            heapq.heappush(heap, (r.t_arrival, seq, ARRIVE, r.rid))
+            seq += 1
+        if self.injector is not None and self.cfg.chaos_every:
+            t_end = float(times.max()) if len(times) else 0.0
+            # tick times by index, not accumulation — summing float steps
+            # can overshoot t_end by an ulp and drop the final tick
+            n_ticks = int(np.floor(t_end / self.cfg.chaos_every + 1e-9))
+            for i in range(1, n_ticks + 1):
+                heapq.heappush(heap, (i * self.cfg.chaos_every, seq,
+                                      CHAOS, -1))
+                seq += 1
+
+        queue: deque = deque()
+        in_flight = 0
+        bid = 0
+        timer_at = float("inf")
+        batches: List[BatchRecord] = []
+
+        def due(now: float) -> bool:
+            return bool(queue) and (
+                len(queue) >= self.cfg.max_batch
+                or now >= records[queue[0]].t_arrival
+                + self.cfg.max_wait - 1e-12)
+
+        def try_dispatch(now: float):
+            nonlocal in_flight, bid, seq, timer_at
+            while queue and in_flight < self.cfg.pipeline_depth and due(now):
+                take = [records[queue.popleft()]
+                        for _ in range(min(len(queue), self.cfg.max_batch))]
+                done_t, batch = self._dispatch(now, take, bid)
+                batches.append(batch)
+                heapq.heappush(heap, (done_t, seq, DONE, bid))
+                seq += 1
+                bid += 1
+                in_flight += 1
+            # arm a close timer only while the head still needs to wait; a
+            # head that is due but blocked on pipeline_depth is re-tried by
+            # the DONE event (an overdue timer would spin the event loop)
+            if queue and not due(now):
+                close_at = records[queue[0]].t_arrival + self.cfg.max_wait
+                if close_at < timer_at - 1e-12 or timer_at <= now:
+                    timer_at = close_at
+                    heapq.heappush(heap, (close_at, seq, CLOSE, -1))
+                    seq += 1
+
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
+            if kind == ARRIVE:
+                queue.append(payload)
+                try_dispatch(now)
+            elif kind == CLOSE:
+                if timer_at <= now + 1e-12:
+                    timer_at = float("inf")
+                try_dispatch(now)
+            elif kind == DONE:
+                in_flight -= 1
+                try_dispatch(now)
+            else:                                    # CHAOS
+                down = set(self.injector.tick())
+                if self.controller is not None:
+                    self.controller.observe_deferred(down)
+                else:
+                    self._down = down
+        return EngineReport(records, batches, self.migrations,
+                            self.cfg.slo)
+
+    def _warmup(self, sizes: np.ndarray) -> None:
+        """Pre-compile the portion forwards for every row bucket the run can
+        hit, so measured service times exclude first-call compilation. The
+        server's failure model is parked during warmup so stateful scenarios
+        (e.g. a chaos script) consume no ticks."""
+        if self.cfg.bucket_rows:
+            max_rows = int(sizes.max()) * self.cfg.max_batch
+            buckets = []
+            b = 1
+            while True:
+                buckets.append(b)
+                if b >= max_rows:
+                    break
+                b <<= 1
+        else:
+            buckets = sorted({int(s) for s in np.unique(sizes)})
+        saved = self.server.failure
+        try:
+            # clean pass compiles the full-quorum path; a second pass with
+            # one device forced down compiles the degraded branches (dead
+            # -slot zeros, per-row masking) so the first real failure does
+            # not absorb a compile spike into its measured service time
+            arrays = self.server.arrays
+            models = [FailureModel(outages=False)]
+            dead_slot = [arrays.names[j] for j in
+                         (arrays.slot_cols[0] if arrays.n_slots else [])]
+            if dead_slot:
+                models.append(FailureModel(forced_failures=dead_slot,
+                                           outages=False))
+            for model in models:
+                self.server.failure = model
+                for b in buckets:
+                    self.server.serve_batch([self._input(b)],
+                                            rng=np.random.default_rng(0))
+        finally:
+            self.server.failure = saved
+
+
+# ---------------------------------------------------------------------------
+# demo fleet — the redeploy_fn contract's reference implementation
+# ---------------------------------------------------------------------------
+
+def build_demo_server(ir, *, feat: int = 32, hidden: int = 64,
+                      n_classes: int = 10, seed: int = 0,
+                      deadline: float = float("inf"),
+                      failure=None) -> QuorumServer:
+    """A content-addressed toy server for a :class:`PlanIR`: a shared trunk
+    (``tanh(x @ W)``), per-partition head columns, and master FC rows indexed
+    by filter id. Because every weight is addressed by the partition's filter
+    set, ANY partition layout has true weights — the reference
+    implementation of the :attr:`QuorumServer.redeploy_fn` contract — and
+    full-quorum logits are partition-independent (the merge telescopes to
+    ``tanh(x @ trunk) @ head @ wfc + bias``), which makes bit-identity
+    checks across migrations meaningful. Used by ``benchmarks/bench_serving``
+    and the migration regression tests."""
+    import jax.numpy as jnp
+    M = ir.M
+    rng = np.random.default_rng(seed)
+    trunk = jnp.asarray(rng.standard_normal((feat, hidden)).astype(np.float32)
+                        / np.sqrt(feat))
+    head = jnp.asarray(rng.standard_normal((hidden, M)).astype(np.float32)
+                       / np.sqrt(hidden))
+    wfc = rng.standard_normal((M, n_classes)).astype(np.float32)
+    bias = jnp.asarray(rng.standard_normal(n_classes).astype(np.float32))
+
+    def fn_for(mask: np.ndarray) -> Callable:
+        idx = jnp.asarray(np.flatnonzero(mask), jnp.int32)
+        def fn(x):
+            return jnp.tanh(x @ trunk) @ head[:, idx]
+        return fn
+
+    def slice_for(mask: np.ndarray):
+        return jnp.asarray(wfc[np.flatnonzero(mask)])
+
+    def redeploy(new_ir, slot: int):
+        mask = np.asarray(new_ir.partition[slot])
+        return fn_for(mask), slice_for(mask)
+
+    dims = [max(int(row.sum()), 1) for row in ir.partition]
+    Dk = max(dims, default=1)
+    fcw = np.zeros((ir.K, Dk, n_classes), np.float32)
+    for k, row in enumerate(ir.partition):
+        idx = np.flatnonzero(row)
+        fcw[k, :len(idx)] = wfc[idx]
+    return QuorumServer(
+        plan=ir,
+        portion_fns=[fn_for(row) for row in ir.partition],
+        fc_weights=jnp.asarray(fcw),
+        fc_bias=bias,
+        deadline=deadline,
+        failure=failure or FailureModel(outages=False),
+        rng=np.random.default_rng(seed),
+        part_dims=tuple(dims),
+        redeploy_fn=redeploy,
+    )

@@ -7,7 +7,7 @@ recovery, no re-training (weights are content-addressed by partition)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,15 +48,23 @@ class FailureInjector:
         simulator's view of a chaos script. Devices already down at the
         window start (an event at_request ≤ start) start down."""
         col = {n: i for i, n in enumerate(names)}
-        alive = np.ones((start + ticks, len(names)), bool)
+        # only the requested window is allocated: events at or before `start`
+        # collapse into the initial per-device state instead of materializing
+        # the O(start) prefix that used to be filled and thrown away
+        init = np.ones(len(names), bool)
+        window: List[Tuple[int, int, bool]] = []
         for e in sorted(self.events, key=lambda e: e.at_request):
             if e.device not in col:
                 continue
-            first = max(e.at_request, 0)
-            if first >= start + ticks:
-                continue
-            alive[first:, col[e.device]] = (e.kind != "crash")
-        return alive[start:]
+            up = e.kind != "crash"
+            if e.at_request <= start:
+                init[col[e.device]] = up       # latest pre-window event wins
+            elif e.at_request < start + ticks:
+                window.append((e.at_request - start, col[e.device], up))
+        alive = np.broadcast_to(init, (ticks, len(names))).copy()
+        for first, j, up in window:
+            alive[first:, j] = up
+        return alive
 
     def advance(self, n: int) -> None:
         """Consume `n` ticks without querying them (applies any events in the

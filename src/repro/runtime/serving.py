@@ -62,6 +62,16 @@ class QuorumServer:
     failure: Any = dataclasses.field(default_factory=FailureModel)
     rng: np.random.Generator = dataclasses.field(
         default_factory=lambda: np.random.default_rng(0))
+    part_dims: Optional[Tuple[int, ...]] = None   # true per-slot feature dims
+    # slots whose FC slice a migration zeroed (no stored weights for their
+    # new partition): they contribute nothing to the merge, so results are
+    # reported degraded until deploy_slot pushes real weights
+    zeroed_slots: frozenset = frozenset()
+    # content-addressed weight store: (new_ir, slot) -> (portion_fn, fc_slice)
+    # for the slot's partition, or None when no weights exist for it. Used by
+    # :meth:`migrate` to rebuild slots whose partition mask changed.
+    redeploy_fn: Optional[Callable[[PlanIR, int],
+                                   Optional[Tuple[Callable, jnp.ndarray]]]] = None
     _jitted: Optional[List[Optional[Callable]]] = dataclasses.field(
         default=None, init=False, repr=False)
     _arrays: Optional[Any] = dataclasses.field(
@@ -103,27 +113,56 @@ class QuorumServer:
 
     # -- serving -------------------------------------------------------------
 
-    def serve(self, x: jnp.ndarray) -> ServeResult:
-        return self.serve_batch([x])[0]
+    def serve(self, x: jnp.ndarray, *,
+              rng: Optional[np.random.Generator] = None) -> ServeResult:
+        return self.serve_batch([x], rng=rng)[0]
 
-    def serve_batch(self, xs: Sequence[jnp.ndarray]) -> List[ServeResult]:
+    def serve_batch(self, xs: Sequence[jnp.ndarray], *,
+                    rng: Optional[np.random.Generator] = None
+                    ) -> List[ServeResult]:
         """Serve R stacked requests with ONE portion forward per partition and
         ONE quorum_aggregate launch. Failures are drawn per request (one
-        vectorized sample for the whole batch)."""
+        vectorized sample for the whole batch).
+
+        ``rng`` overrides the server's shared generator — the continuous
+        -batching engine hands every micro-batch its own spawned stream, so
+        failure draws are deterministic per batch id regardless of how chaos
+        ticks and migrations interleave with dispatches.
+
+        Re-entrant with :meth:`migrate`: all compiled state (portion
+        forwards, FC slices, plan arrays) is snapshotted before any compute,
+        and migration installs fresh objects instead of mutating shared
+        ones — an in-flight batch finishes on the plan it was dispatched
+        under while queued requests pick up the migrated plan."""
         R = len(xs)
         if R == 0:
             return []
+        # -- migration handoff snapshot (one read of every mutable field) ----
+        jitted = self.jitted_portions          # fully-compiled private list
+        fc_weights, fc_bias = self.fc_weights, self.fc_bias
         arrays = self.arrays
-        Kp = self.plan.K
+        failure = self.failure
+        knowledge_gap = bool(self.zeroed_slots)
+        rng = self.rng if rng is None else rng
+        Kp = len(jitted)
+
         sizes = [int(x.shape[0]) for x in xs]
         offs = np.concatenate([[0], np.cumsum(sizes)])
-        x_all = xs[0] if R == 1 else jnp.concatenate(list(xs), axis=0)
+        # stack requests in numpy: an eager jnp.concatenate compiles one XLA
+        # program per DISTINCT tuple of request shapes, which under
+        # continuous batching (heterogeneous sizes) means a ~20ms recompile
+        # on almost every micro-batch
+        x_all = xs[0] if R == 1 else jnp.asarray(
+            np.concatenate([np.asarray(x) for x in xs], axis=0))
         B = int(offs[-1])
 
-        alive, delay = self.failure.sample(self.rng, arrays, R)
-        deadline = getattr(self.failure, "deadline", None)
-        if deadline is None:
-            deadline = self.deadline
+        alive, delay = failure.sample(rng, arrays, R)
+        # a scenario deadline can only TIGHTEN the server's own SLO deadline
+        # (taking the min) — it must never loosen it
+        deadline = self.deadline
+        scenario_deadline = getattr(failure, "deadline", None)
+        if scenario_deadline is not None:
+            deadline = min(deadline, scenario_deadline)
         _, arrived, latency = reduce_trials(arrays, alive, delay, deadline)
 
         # per-sample row mask: request r's rows of portion k are zeroed when
@@ -131,13 +170,13 @@ class QuorumServer:
         row_arrived = np.repeat(arrived, sizes, axis=0)     # (B, K)
         any_arrived = arrived.any(axis=0)                   # (K,)
 
-        Dk = self.fc_weights.shape[1]
+        Dk = fc_weights.shape[1]
         portions = []
         for kslot in range(Kp):
             if not any_arrived[kslot]:
                 portions.append(jnp.zeros((B, Dk), jnp.float32))
                 continue
-            p = self.jitted_portions[kslot](x_all)
+            p = jitted[kslot](x_all)
             if p.shape[-1] < Dk:          # pad to the uniform width
                 p = jnp.pad(p, ((0, 0), (0, Dk - p.shape[-1])))
             if not row_arrived[:, kslot].all():
@@ -145,7 +184,7 @@ class QuorumServer:
             portions.append(p)
         stacked = jnp.stack(portions)          # (K, B, Dk)
         logits = np.asarray(K.quorum_aggregate(
-            stacked, self.fc_weights, self.fc_bias,
+            stacked, fc_weights, fc_bias,
             jnp.asarray(any_arrived, jnp.int32)))
 
         results = []
@@ -155,7 +194,9 @@ class QuorumServer:
                 logits=logits[offs[r]:offs[r + 1]],
                 latency=float(latency[r]),
                 arrived=arrived[r],
-                degraded=not arrived[r].all(),
+                # a migration-zeroed slot contributes nothing even when its
+                # replicas arrive — that answer is degraded, not complete
+                degraded=not arrived[r].all() or knowledge_gap,
                 failed_devices=failed,
             ))
         return results
@@ -169,37 +210,136 @@ class QuorumServer:
         `mapping` maps NEW slot → OLD slot (e.g. from
         :func:`repro.runtime.failures.remap_students`); identity by default.
         A slot whose knowledge-partition mask is unchanged keeps its compiled
-        portion forward and FC slice; a slot whose mask changed reuses the
-        mapped slot's distilled student (placement-only redeployment, no
-        retraining) but is re-jitted lazily. Returns and stores migration
-        stats: ``{"rejitted_slots", "reused_slots"}``."""
+        portion forward and FC slice. A slot whose mask changed must NOT keep
+        the mapped slot's FC slice — its portion features belong to the new
+        partition, and multiplying them into the stale slot's FC columns
+        produced wrong logits. Instead the slice is rebuilt from the
+        content-addressed weight store (:attr:`redeploy_fn`, which also
+        supplies the matching portion forward); when no weights exist for the
+        new partition the slice is zeroed — the slot contributes nothing
+        until real weights arrive via :meth:`deploy_slot` — and the mapped
+        slot's student stays deployed as the placement-only warm start.
+
+        Out-of-range ``mapping`` sources raise ``ValueError`` (they used to
+        be silently clamped to the last slot). Returns and stores migration
+        stats: ``rejitted_slots`` (compiled forward invalidated — exactly
+        the store-refit slots), ``reused_slots`` (mask unchanged, everything
+        kept), ``refit_slots``, ``zeroed_slots`` (forward kept compiled,
+        FC zeroed).
+
+        Thread-safe against in-flight :meth:`serve_batch` calls: every field
+        is replaced with a freshly-built object, never mutated in place."""
         old_ir = self.ir
         old_count = len(self.portion_fns)
         K_new = new_ir.K
         if mapping is None:
             mapping = {k: k for k in range(min(K_new, old_ir.K))}
         old_jit = self._jitted or [None] * old_count
-        new_fns, new_jit, fc_rows, rejit = [], [], [], []
+        old_dims = list(self.part_dims) if self.part_dims is not None else \
+            [int(self.fc_weights.shape[1])] * old_count
+        C = int(self.fc_weights.shape[2])
+        new_fns: List[Callable] = []
+        new_jit: List[Optional[Callable]] = []
+        slices: List[jnp.ndarray] = []
+        dims: List[int] = []
+        rejit, refit, zeroed = [], [], []
         for k in range(K_new):
-            src = mapping.get(k, k)
-            src = min(max(int(src), 0), old_count - 1)
-            same_mask = (src < old_ir.K
+            if k in mapping:
+                src = int(mapping[k])
+                if not 0 <= src < old_count:
+                    raise ValueError(
+                        f"migration mapping for slot {k} points at source "
+                        f"slot {src}, but the server holds {old_count} "
+                        f"portions")
+            elif k < old_count:
+                src = k
+            else:
+                src = -1        # grown slot: only the weight store can fill it
+            same_mask = (0 <= src < old_ir.K
                          and new_ir.partition.shape[1] == old_ir.partition.shape[1]
                          and bool((new_ir.partition[k] == old_ir.partition[src]).all()))
-            new_fns.append(self.portion_fns[src])
-            new_jit.append(old_jit[src] if same_mask else None)
-            if not same_mask:
+            if same_mask:
+                new_fns.append(self.portion_fns[src])
+                new_jit.append(old_jit[src])
+                slices.append(self.fc_weights[src])
+                dims.append(old_dims[src])
+                if src in self.zeroed_slots:
+                    zeroed.append(k)   # carried slice is still all-zero:
+                                       # the knowledge gap survives the move
+                continue
+            weights = (self.redeploy_fn(new_ir, k)
+                       if self.redeploy_fn is not None else None)
+            if weights is not None:
+                fn, fc_slice = weights
+                fc_slice = jnp.asarray(fc_slice, jnp.float32)
+                new_fns.append(fn)
+                new_jit.append(None)
+                slices.append(fc_slice)
+                dims.append(int(fc_slice.shape[0]))
                 rejit.append(k)
-            fc_rows.append(src)
+                refit.append(k)
+            elif src >= 0:
+                # the src student stays deployed unchanged (only its FC
+                # slice is zeroed), so its compiled wrapper is still valid
+                # and the slot does NOT count as re-jitted
+                new_fns.append(self.portion_fns[src])
+                new_jit.append(old_jit[src])
+                slices.append(jnp.zeros_like(self.fc_weights[src]))
+                dims.append(old_dims[src])     # the deployed forward's width
+                zeroed.append(k)
+            else:
+                raise ValueError(
+                    f"slot {k} has no mapping source and the weight store "
+                    f"holds nothing for its partition")
+        Dk = max([int(s.shape[0]) for s in slices], default=1)
+        padded = [s if s.shape[0] == Dk
+                  else jnp.pad(s, ((0, Dk - s.shape[0]), (0, 0))) for s in slices]
         self.portion_fns = new_fns
         self._jitted = new_jit
-        self.fc_weights = self.fc_weights[jnp.asarray(fc_rows, jnp.int32)]
+        self.fc_weights = (jnp.stack(padded) if padded
+                           else jnp.zeros((0, Dk, C), jnp.float32))
+        self.part_dims = tuple(dims)
+        self.zeroed_slots = frozenset(zeroed)
         self.plan = new_ir
         self._ir = new_ir
         self._arrays = None
         self.last_migration = {"rejitted_slots": tuple(rejit),
-                               "reused_slots": K_new - len(rejit)}
+                               "reused_slots": K_new - len(rejit) - len(zeroed),
+                               "refit_slots": tuple(refit),
+                               "zeroed_slots": tuple(zeroed)}
         return self.last_migration
+
+    def deploy_slot(self, k: int, fn: Callable,
+                    fc_slice: jnp.ndarray) -> None:
+        """Push (re-)distilled weights for slot ``k`` — the deployment
+        layer's handshake for slots a migration left zeroed. Installs the
+        portion forward (jit'd lazily) and the FC slice, growing the uniform
+        slice width when needed. Re-entrant with in-flight serves (fresh
+        objects, no in-place mutation)."""
+        if not 0 <= k < len(self.portion_fns):
+            raise ValueError(f"slot {k} out of range "
+                             f"(server holds {len(self.portion_fns)})")
+        fc_slice = jnp.asarray(fc_slice, jnp.float32)
+        d = int(fc_slice.shape[0])
+        Dk = int(self.fc_weights.shape[1])
+        weights = self.fc_weights
+        if d > Dk:
+            weights = jnp.pad(weights, ((0, 0), (0, d - Dk), (0, 0)))
+            Dk = d
+        if d < Dk:
+            fc_slice = jnp.pad(fc_slice, ((0, Dk - d), (0, 0)))
+        self.fc_weights = weights.at[k].set(fc_slice)
+        fns = list(self.portion_fns)
+        fns[k] = fn
+        self.portion_fns = fns
+        jit = list(self._jitted or [None] * len(fns))
+        jit[k] = None
+        self._jitted = jit
+        if self.part_dims is not None:
+            dims = list(self.part_dims)
+            dims[k] = d
+            self.part_dims = tuple(dims)
+        self.zeroed_slots = self.zeroed_slots - {k}
 
     def remove_device(self, name: str, *, repair: bool = True):
         """Permanent loss. With ``repair=True`` (default) the loss routes
@@ -237,7 +377,13 @@ class QuorumServer:
 def server_from_ensemble(ens, deadline: float = float("inf"),
                          failure: Optional[FailureModel] = None,
                          seed: int = 0) -> QuorumServer:
-    """Build a QuorumServer from a core.pipeline.Ensemble."""
+    """Build a QuorumServer from a core.pipeline.Ensemble.
+
+    The server carries a content-addressed weight store over the ensemble's
+    distilled students (keyed by partition filter set): a migration onto a
+    plan whose partition matches one the ensemble was distilled for refits
+    that slot's portion forward AND FC slice from the store instead of
+    serving stale columns."""
     Dk = max(ens.part_dims)
     C = ens.fc["bias"].shape[0]
     Kp = len(ens.students)
@@ -255,12 +401,31 @@ def server_from_ensemble(ens, deadline: float = float("inf"),
             return feats
         return fn
 
+    portion_fns = [make_fn(i) for i in range(Kp)]
+    ir = getattr(ens, "ir", None)
+    groups = sorted(ens.plan.groups, key=lambda g: g.partition_idx)
+    store: Dict[frozenset, Tuple[Callable, jnp.ndarray]] = {}
+    for kslot in range(Kp):
+        if ir is not None and kslot < ir.K:
+            filters = np.flatnonzero(ir.partition[kslot])
+        else:
+            filters = np.asarray(groups[kslot].filters, np.int64)
+        store[frozenset(filters.tolist())] = (
+            portion_fns[kslot],
+            jnp.asarray(weights[kslot, :ens.part_dims[kslot]]))
+
+    def redeploy(new_ir: PlanIR, slot: int):
+        key = frozenset(np.flatnonzero(new_ir.partition[slot]).tolist())
+        return store.get(key)
+
     return QuorumServer(
-        plan=getattr(ens, "ir", None) or ens.plan,
-        portion_fns=[make_fn(i) for i in range(Kp)],
+        plan=ir or ens.plan,
+        portion_fns=portion_fns,
         fc_weights=jnp.asarray(weights),
         fc_bias=jnp.asarray(ens.fc["bias"]),
         deadline=deadline,
         failure=failure or FailureModel(),
         rng=np.random.default_rng(seed),
+        part_dims=tuple(int(d) for d in ens.part_dims),
+        redeploy_fn=redeploy,
     )

@@ -109,11 +109,15 @@ def test_migrate_reuses_jitted_portions_for_untouched_slots():
     assert stats["rejitted_slots"] == ()
     assert srv.jitted_portions[0] is jitted_before[0]
     assert srv.jitted_portions[1] is jitted_before[1]
-    # partition change on slot 0 → exactly that slot re-jits
+    # partition change on slot 0 with no weight store: the deployed forward
+    # is unchanged so its compiled wrapper is kept (nothing re-jits) — only
+    # the now-stale FC slice is zeroed
     new_part = np.array(ir.partition)
     new_part[0] = ~new_part[0]
     stats = srv.migrate(srv.ir.with_(partition=new_part))
-    assert stats["rejitted_slots"] == (0,)
+    assert stats["rejitted_slots"] == ()
+    assert stats["zeroed_slots"] == (0,)
+    assert srv.jitted_portions[0] is jitted_before[0]
     assert srv.jitted_portions[1] is jitted_before[1]
 
 

@@ -1,0 +1,304 @@
+"""Continuous-batching serving engine: arrival processes, micro-batch
+scheduling under the SLO budget, chaos interleaving with live migration,
+per-batch RNG streams, and the controller's non-blocking observe hook.
+All runs use a deterministic service model — part of the CI fast lane."""
+import numpy as np
+import pytest
+
+from repro.core import planner as PL
+from repro.core.plan_ir import PlanIR, device_matrix, eq1a_latency, student_matrix
+from repro.core.scenarios import MMPPArrivals, PoissonArrivals
+from repro.core.simulator import FailureModel, make_fleet
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.runtime.controller import ClusterController
+from repro.runtime.engine import (EngineConfig, ServingEngine,
+                                  _serial_config, build_demo_server)
+from repro.runtime.failures import FailureEvent, FailureInjector
+
+
+# -- fixtures -----------------------------------------------------------------
+
+def _toy_ir(M=8):
+    devs = [Device("a", 1e7, 2e6, 500, 0.3), Device("b", 2e7, 2e6, 500, 0.3),
+            Device("c", 1e7, 2e6, 500, 0.3), Device("d", 3e7, 2e6, 500, 0.3)]
+    names, dcaps = device_matrix(devs)
+    snames, scaps = student_matrix(
+        [StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)])
+    member = np.array([[1, 1, 0, 0], [0, 0, 1, 1]], bool)
+    part = np.zeros((2, M), bool)
+    part[0, :M // 2] = True
+    part[1, M // 2:] = True
+    return PlanIR(names, dcaps, snames, scaps, member, part,
+                  np.zeros(2, np.int64), np.arange(2, dtype=np.int64),
+                  eq1a_latency(scaps, dcaps), np.zeros((M, M)), 1.0, 0.5)
+
+
+def _cfg(**kw):
+    base = dict(max_batch=8, max_wait=0.01, slo=0.2,
+                service_model=(2e-3, 1e-4), input_dim=8, seed=0)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _server(ir=None, **kw):
+    return build_demo_server(ir or _toy_ir(), feat=8, hidden=16,
+                             n_classes=3, seed=0, **kw)
+
+
+# -- arrival processes --------------------------------------------------------
+
+def test_poisson_arrivals_rate_and_sizes():
+    gen = PoissonArrivals(rate=500.0, sizes=(1, 2, 4),
+                          size_probs=(0.5, 0.3, 0.2))
+    times, sizes = gen.generate(np.random.default_rng(0), 4.0)
+    assert abs(len(times) / 4.0 - 500.0) < 50.0      # ~rate·horizon arrivals
+    assert (np.diff(times) >= 0).all() and times[-1] < 4.0
+    assert set(np.unique(sizes)) <= {1, 2, 4}
+    assert 1.0 < sizes.mean() < 3.0                  # heterogeneous mix
+
+
+def test_poisson_arrivals_deterministic_and_empty():
+    gen = PoissonArrivals(rate=100.0)
+    a = gen.generate(np.random.default_rng(3), 1.0)
+    b = gen.generate(np.random.default_rng(3), 1.0)
+    np.testing.assert_array_equal(a[0], b[0])
+    t, s = PoissonArrivals(rate=0.0).generate(np.random.default_rng(0), 1.0)
+    assert len(t) == 0 and len(s) == 0
+
+
+def test_mmpp_rejects_zero_dwell():
+    with pytest.raises(ValueError, match="dwell"):
+        MMPPArrivals(dwell=(0.0, 0.1)).generate(np.random.default_rng(0), 1.0)
+
+
+def test_mmpp_burstier_than_poisson():
+    """Same mean rate, but the MMPP count process must over-disperse."""
+    mm = MMPPArrivals(rates=(20.0, 400.0), dwell=(0.5, 0.125))
+    rate = mm.mean_rate()
+    rng = np.random.default_rng(1)
+    t_mm, _ = mm.generate(rng, 50.0)
+    t_po, _ = PoissonArrivals(rate).generate(np.random.default_rng(2), 50.0)
+    bins = np.arange(0, 50.0, 0.25)
+
+    def dispersion(t):
+        c = np.histogram(t, bins)[0]
+        return c.var() / max(c.mean(), 1e-9)
+
+    assert abs(len(t_mm) - len(t_po)) < 0.25 * len(t_po)   # same mean load
+    assert dispersion(t_po) < 2.0                          # ≈1 for Poisson
+    assert dispersion(t_mm) > 3.0 * dispersion(t_po)       # bursty
+
+
+# -- scheduling ---------------------------------------------------------------
+
+def test_engine_serves_every_request_in_order():
+    srv = _server()
+    times, sizes = PoissonArrivals(400.0, sizes=(1, 2, 4)).generate(
+        np.random.default_rng(0), 0.5)
+    rep = ServingEngine(srv, _cfg()).run(times, sizes)
+    assert len(rep.records) == len(times)
+    for r in rep.records:
+        assert np.isfinite(r.t_done)
+        assert r.t_arrival <= r.t_dispatch < r.t_done
+        assert r.quorum_ok and not r.degraded
+    # FIFO: dispatch order follows arrival order
+    order = [r.batch_id for r in sorted(rep.records, key=lambda r: r.rid)]
+    assert order == sorted(order)
+    # conservation: every batch's requests sum to the record count
+    assert sum(b.n_requests for b in rep.batches) == len(times)
+
+
+def test_batch_closes_at_max_batch_under_pressure():
+    srv = _server()
+    # all requests arrive at t=0 → batches must close full
+    times = np.zeros(40)
+    rep = ServingEngine(srv, _cfg(max_batch=8)).run(times)
+    assert [b.n_requests for b in rep.batches] == [8] * 5
+    assert rep.batches[0].t_dispatch == 0.0          # full batch: no wait
+
+
+def test_batch_closes_at_max_wait_when_scarce():
+    srv = _server()
+    rep = ServingEngine(srv, _cfg(max_batch=8, max_wait=0.01)).run([0.0, 0.002])
+    assert len(rep.batches) == 1 and rep.batches[0].n_requests == 2
+    # the batch closed when the OLDEST request had waited max_wait
+    assert rep.batches[0].t_dispatch == pytest.approx(0.01)
+
+
+def test_serial_config_is_per_request():
+    srv = _server()
+    times = np.sort(np.random.default_rng(0).uniform(0, 0.5, 30))
+    rep = ServingEngine(srv, _serial_config(_cfg())).run(times)
+    assert all(b.n_requests == 1 for b in rep.batches)
+
+
+def test_continuous_batching_beats_serial_throughput():
+    """Open-loop overload: batching amortizes the per-dispatch alpha, the
+    per-request baseline saturates at 1/(alpha+beta)."""
+    times = np.sort(np.random.default_rng(0).uniform(0, 0.02, 200))
+    rep_b = ServingEngine(_server(), _cfg(max_batch=16)).run(times)
+    rep_s = ServingEngine(_server(), _serial_config(_cfg())).run(times)
+    thr_b = rep_b.summary()["throughput"]
+    thr_s = rep_s.summary()["throughput"]
+    assert thr_b > 5.0 * thr_s
+    assert rep_b.summary()["p99"] < rep_s.summary()["p99"]
+
+
+def test_pipeline_depth_overlaps_batches():
+    srv = _server()
+    times = np.zeros(32)
+    rep1 = ServingEngine(srv, _cfg(max_batch=8)).run(times)
+    rep2 = ServingEngine(_server(), _cfg(max_batch=8,
+                                         pipeline_depth=2)).run(times)
+    # two batches in flight → the second dispatches before the first lands
+    d1 = [b.t_dispatch for b in rep1.batches]
+    d2 = [b.t_dispatch for b in rep2.batches]
+    assert d2[1] == d1[0] and d2[1] < rep2.batches[0].t_done
+    assert rep2.records[-1].t_done < rep1.records[-1].t_done
+
+
+def test_engine_deterministic():
+    times, sizes = PoissonArrivals(300.0, sizes=(1, 2)).generate(
+        np.random.default_rng(5), 0.3)
+    s1 = ServingEngine(_server(), _cfg()).run(times, sizes).summary()
+    s2 = ServingEngine(_server(), _cfg()).run(times, sizes).summary()
+    assert s1 == s2
+
+
+# -- per-batch RNG streams ----------------------------------------------------
+
+def test_engine_preserves_server_failure_model():
+    """Without a chaos source or an explicit failure_for, the engine must
+    serve under the server's OWN failure model, not silently replace it."""
+    srv = _server()
+    flaky = FailureModel(crash_prob=0.9, outages=False)
+    srv.failure = flaky
+    rep = ServingEngine(srv, _cfg()).run(np.linspace(0, 0.3, 30))
+    assert srv.failure is flaky                      # not clobbered
+    assert rep.summary()["quorum_rate"] < 1.0        # the model actually ran
+
+
+def test_per_batch_rng_streams_reproducible_and_distinct():
+    ir = _toy_ir()
+    flaky = FailureModel(crash_prob=0.4, outages=False)
+
+    def run(seed):
+        srv = _server(ir)
+        eng = ServingEngine(srv, _cfg(seed=seed),
+                            failure_for=lambda down: flaky)
+        return eng.run(np.linspace(0, 0.5, 60))
+
+    a, b, c = run(0), run(0), run(1)
+    assert [r.quorum_ok for r in a.records] == [r.quorum_ok for r in b.records]
+    assert [r.quorum_ok for r in a.records] != [r.quorum_ok for r in c.records]
+    assert any(not r.quorum_ok for r in a.records)     # chaos actually bites
+    assert len({r.batch_id for r in a.records if not r.quorum_ok}) > 1
+
+
+# -- chaos + live migration ---------------------------------------------------
+
+def test_chaos_migration_mid_stream():
+    """Kill both replicas of group 0 mid-stream: the controller repairs via
+    its non-blocking hook, queued requests pick up the new plan epoch, and
+    quorum holds once the repair lands."""
+    ir = _toy_ir()
+    srv = _server(ir)
+    injector = FailureInjector([FailureEvent(1, "a"), FailureEvent(1, "b")])
+    ctl = ClusterController(ir, server=srv, injector=injector, seed=0)
+    times = np.linspace(0, 0.4, 40)
+    cfg = _cfg(max_batch=4, chaos_every=0.1)
+    rep = ServingEngine(srv, cfg, controller=ctl).run(times)
+    assert len(rep.migrations) == 1
+    t_mig, out = rep.migrations[0]
+    assert out.kind == "repair"
+    epochs = [r.plan_epoch for r in rep.records]
+    assert epochs[0] == 0 and epochs[-1] == 1       # migration mid-stream
+    after = [r for r in rep.records if r.plan_epoch == 1]
+    assert after and all(r.quorum_ok for r in after)
+    # the server followed the controller onto the repaired plan
+    assert srv.ir is ctl.ir
+
+
+def test_rerun_resets_per_run_metrics():
+    """A second run() on the same engine must not inherit the first run's
+    migrations or plan epochs in its report."""
+    ir = _toy_ir()
+    srv = _server(ir)
+    injector = FailureInjector([FailureEvent(1, "a"), FailureEvent(1, "b")])
+    ctl = ClusterController(ir, server=srv, injector=injector, seed=0)
+    eng = ServingEngine(srv, _cfg(max_batch=4, chaos_every=0.1),
+                        controller=ctl)
+    rep1 = eng.run(np.linspace(0, 0.4, 40))
+    assert len(rep1.migrations) == 1
+    rep2 = eng.run(np.linspace(0, 0.1, 10))          # no new chaos events
+    assert rep2.migrations == [] and rep2.summary()["migrations"] == 0
+    assert all(r.plan_epoch == 0 for r in rep2.records)
+
+
+def test_chaos_without_controller_degrades():
+    ir = _toy_ir()
+    srv = _server(ir)
+    injector = FailureInjector([FailureEvent(1, "a"), FailureEvent(1, "b")])
+    rep = ServingEngine(srv, _cfg(max_batch=4, chaos_every=0.1),
+                        injector=injector).run(np.linspace(0, 0.4, 40))
+    assert rep.migrations == []
+    late = [r for r in rep.records if r.t_dispatch > 0.2]
+    assert late and all(not r.quorum_ok and r.degraded for r in late)
+
+
+def test_in_flight_batch_finishes_on_old_plan():
+    """A batch dispatched before the chaos tick keeps its pre-migration
+    epoch even though it completes after the repair is applied."""
+    ir = _toy_ir()
+    srv = _server(ir)
+    injector = FailureInjector([FailureEvent(1, "a"), FailureEvent(1, "b")])
+    ctl = ClusterController(ir, server=srv, injector=injector, seed=0)
+    # slow service: the t=0 batch is still in flight at the chaos tick
+    cfg = _cfg(max_batch=4, max_wait=0.0, service_model=(0.3, 0.0),
+               chaos_every=0.1)
+    rep = ServingEngine(srv, cfg, controller=ctl).run([0.0, 0.2, 0.25, 0.3])
+    first = rep.records[0]
+    assert first.plan_epoch == 0 and first.t_done > 0.1
+    assert rep.records[-1].plan_epoch == 1
+
+
+# -- controller non-blocking hook ---------------------------------------------
+
+def test_observe_deferred_defers_until_poll():
+    ir = _toy_ir()
+    ctl = ClusterController(ir, seed=0)
+    assert ctl.observe_deferred(["a", "b"]) is True
+    assert ctl.ir is ir and ctl.history == []        # nothing planned yet
+    out = ctl.poll()
+    assert out is not None and out.kind == "repair"
+    assert ctl.down == {"a", "b"}
+    assert ctl.poll() is None                        # drained
+
+
+def test_observe_deferred_coalesces():
+    ir = _toy_ir()
+    ctl = ClusterController(ir, seed=0)
+    ctl.observe_deferred(["a", "b"])
+    ctl.observe_deferred([])                         # newest set wins
+    assert ctl.poll() is None and ctl.down == set()
+    assert ctl.history == []
+
+
+# -- engine on a planned fleet ------------------------------------------------
+
+def test_engine_on_planned_8_device_fleet():
+    students = [StudentArch("small", 5e6, 0.6e6, 64, 0.15e6),
+                StudentArch("mid", 2e7, 1.5e6, 64, 0.4e6)]
+    rng = np.random.default_rng(0)
+    a = np.abs(rng.normal(size=(32, 16)))
+    A = 0.5 * ((a.T @ a) + (a.T @ a).T)
+    np.fill_diagonal(A, 0)
+    fleet = make_fleet(8, seed=0, mem_range=(1.0e6, 4e6))
+    ir = PL.tune_d_th_ir(fleet, A, students, p_th=0.3, seed=0)
+    srv = build_demo_server(ir, feat=8, hidden=16, n_classes=3, seed=0)
+    times, sizes = PoissonArrivals(300.0, sizes=(1, 4)).generate(
+        np.random.default_rng(2), 0.3)
+    s = ServingEngine(srv, _cfg()).run(times, sizes).summary()
+    assert s["n"] == len(times)
+    assert s["quorum_rate"] == 1.0 and s["slo_attainment"] == 1.0

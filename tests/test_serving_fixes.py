@@ -1,0 +1,238 @@
+"""Correctness fixes in the quorum-serving/migration hot path: the
+FC-slice reuse bug after migration, deadline precedence, the alive_matrix
+window allocation, and the migration bit-identity regression. All seeded —
+part of the CI fast lane."""
+import numpy as np
+import pytest
+
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.plan_ir import (PlanIR, device_matrix, eq1a_latency,
+                                student_matrix)
+from repro.core.scenarios import StragglerScenario
+from repro.core.simulator import FailureModel
+from repro.runtime.engine import build_demo_server
+from repro.runtime.failures import FailureEvent, FailureInjector
+
+
+def _toy_ir(M=8):
+    devs = [Device("a", 1e7, 2e6, 500, 0.3), Device("b", 2e7, 2e6, 500, 0.3),
+            Device("c", 1e7, 2e6, 500, 0.3), Device("d", 3e7, 2e6, 500, 0.3)]
+    names, dcaps = device_matrix(devs)
+    snames, scaps = student_matrix(
+        [StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)])
+    member = np.array([[1, 1, 0, 0], [0, 0, 1, 1]], bool)
+    part = np.zeros((2, M), bool)
+    part[0, :M // 2] = True
+    part[1, M // 2:] = True
+    return PlanIR(names, dcaps, snames, scaps, member, part,
+                  np.zeros(2, np.int64), np.arange(2, dtype=np.int64),
+                  eq1a_latency(scaps, dcaps), np.zeros((M, M)), 1.0, 0.5)
+
+
+def _x(rows=3, feat=8, seed=5):
+    import jax.numpy as jnp
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=(rows, feat)).astype(np.float32))
+
+
+# -- migration regression (satellite: FC-slice reuse) -------------------------
+
+def test_migration_matches_fresh_server_after_remove_device():
+    """remove_device → repair → migrate must serve logits bit-identical to a
+    QuorumServer built fresh from the repaired plan. The second leg — a
+    partition reshape with an imperfect (but in-range) student mapping —
+    is the case the old migrate got wrong: it kept serving the mapped
+    slot's portion features against that slot's stale FC columns instead of
+    refitting both from the weight store."""
+    srv = build_demo_server(_toy_ir(), feat=8, hidden=16, n_classes=3, seed=0)
+    x = _x()
+    srv.remove_device("a")
+    out = srv.remove_device("b")
+    assert out is not None and out.kind == "repair"
+    fresh = build_demo_server(srv.ir, feat=8, hidden=16, n_classes=3, seed=0)
+    r_mig = srv.serve_batch([x], rng=np.random.default_rng(7))[0]
+    r_new = fresh.serve_batch([x], rng=np.random.default_rng(7))[0]
+    assert r_mig.arrived.all() and r_new.arrived.all()
+    np.testing.assert_array_equal(r_mig.logits, r_new.logits)
+    assert r_mig.latency == r_new.latency
+
+    # full-replan-style partition reshape, mapping kept identity (the remap
+    # is max-overlap, not exact): both slots' masks changed
+    new_part = np.zeros((2, srv.ir.M), bool)
+    new_part[0, :5] = True
+    new_part[1, 5:] = True
+    new_ir = srv.ir.with_(partition=new_part)
+    stats = srv.migrate(new_ir, {0: 0, 1: 1})
+    assert stats["rejitted_slots"] == (0, 1)
+    assert stats["refit_slots"] == (0, 1)       # rebuilt from the store
+    fresh2 = build_demo_server(new_ir, feat=8, hidden=16, n_classes=3, seed=0)
+    r_mig = srv.serve_batch([x], rng=np.random.default_rng(7))[0]
+    r_new = fresh2.serve_batch([x], rng=np.random.default_rng(7))[0]
+    np.testing.assert_array_equal(r_mig.logits, r_new.logits)
+
+
+def test_migrate_zeroes_fc_when_store_has_no_weights():
+    """Without stored weights for a reshaped partition the stale FC slice
+    must be ZEROED (contribute nothing), never multiplied into the new
+    portion's features."""
+    srv = build_demo_server(_toy_ir(), feat=8, hidden=16, n_classes=3, seed=0)
+    srv.redeploy_fn = None                        # no weight store
+    x = _x()
+    before = srv.serve_batch([x], rng=np.random.default_rng(7))[0]
+    new_part = np.array(srv.ir.partition)
+    new_part[[0, 1]] = new_part[[1, 0]]           # swap the two masks
+    stats = srv.migrate(srv.ir.with_(partition=new_part), {0: 0, 1: 1})
+    assert stats["zeroed_slots"] == (0, 1)
+    assert srv.zeroed_slots == {0, 1}
+    r = srv.serve_batch([x], rng=np.random.default_rng(7))[0]
+    # zeroed slices ⇒ bias-only logits, NOT the old (stale-columns) merge —
+    # and the answer is reported degraded even though every replica arrived
+    np.testing.assert_allclose(
+        r.logits, np.broadcast_to(np.asarray(srv.fc_bias), r.logits.shape),
+        atol=1e-6)
+    assert not np.allclose(r.logits, before.logits)
+    assert r.degraded and r.arrived.all()
+
+
+def test_knowledge_gap_survives_placement_only_migration():
+    """A later same-mask migration (e.g. a controller repair moving donors)
+    carries a zeroed slice forward — the knowledge-gap flag must survive."""
+    srv = build_demo_server(_toy_ir(), feat=8, hidden=16, n_classes=3, seed=0)
+    srv.redeploy_fn = None
+    new_part = np.array(srv.ir.partition)
+    new_part[[0, 1]] = new_part[[1, 0]]
+    srv.migrate(srv.ir.with_(partition=new_part), {0: 0, 1: 1})
+    assert srv.zeroed_slots == {0, 1}
+    # placement-only follow-up: swap group memberships, partitions unchanged
+    stats = srv.migrate(srv.ir.with_(member=np.array(srv.ir.member)[::-1]))
+    assert stats["zeroed_slots"] == (0, 1)
+    assert srv.zeroed_slots == {0, 1}
+    r = srv.serve_batch([_x()], rng=np.random.default_rng(7))[0]
+    assert r.degraded and r.arrived.all()
+
+
+def test_deploy_slot_restores_zeroed_slot():
+    srv = build_demo_server(_toy_ir(), feat=8, hidden=16, n_classes=3, seed=0)
+    store = srv.redeploy_fn
+    srv.redeploy_fn = None
+    x = _x()
+    new_part = np.array(srv.ir.partition)
+    new_part[[0, 1]] = new_part[[1, 0]]
+    new_ir = srv.ir.with_(partition=new_part)
+    srv.migrate(new_ir, {0: 0, 1: 1})
+    for k in (0, 1):                              # push the true weights
+        fn, fc = store(new_ir, k)
+        srv.deploy_slot(k, fn, fc)
+    assert srv.zeroed_slots == frozenset()        # gap closed
+    fresh = build_demo_server(new_ir, feat=8, hidden=16, n_classes=3, seed=0)
+    r = srv.serve_batch([x], rng=np.random.default_rng(7))[0]
+    r_new = fresh.serve_batch([x], rng=np.random.default_rng(7))[0]
+    np.testing.assert_array_equal(r.logits, r_new.logits)
+    assert not r.degraded
+
+
+def test_migrate_rejects_out_of_range_mapping():
+    """Out-of-range mapping sources used to be silently clamped to the last
+    slot — now they raise."""
+    srv = build_demo_server(_toy_ir(), feat=8, hidden=16, n_classes=3, seed=0)
+    with pytest.raises(ValueError, match="source slot 9"):
+        srv.migrate(srv.ir, {0: 9})
+    with pytest.raises(ValueError, match="source slot -1"):
+        srv.migrate(srv.ir, {1: -1})
+
+
+# -- deadline precedence (satellite) ------------------------------------------
+
+def test_scenario_deadline_cannot_loosen_server_slo():
+    """The effective deadline is min(server, scenario): a loose scenario
+    deadline must not override a tight server SLO."""
+    srv = build_demo_server(_toy_ir(), feat=8, hidden=16, n_classes=3, seed=0)
+    x = _x()
+    lat = srv.ir.group_latency().max()            # every portion needs ≥ this
+    srv.deadline = 0.5 * float(srv.ir.group_latency().min())
+    srv.failure = StragglerScenario(scale=0.0, deadline=1e9,
+                                    base=FailureModel(outages=False))
+    r = srv.serve(x, rng=np.random.default_rng(0))
+    assert r.degraded and not r.arrived.any()     # tight SLO still applies
+    # and a TIGHT scenario deadline still tightens a loose server one
+    srv.deadline = float("inf")
+    srv.failure = StragglerScenario(scale=0.0, deadline=0.5 * float(lat),
+                                    base=FailureModel(outages=False))
+    r = srv.serve(x, rng=np.random.default_rng(0))
+    assert r.degraded
+
+
+# -- alive_matrix window allocation (satellite) -------------------------------
+
+def _alive_matrix_reference(events, names, ticks, start):
+    """The pre-fix implementation (allocates the full O(start+ticks) span)."""
+    col = {n: i for i, n in enumerate(names)}
+    alive = np.ones((start + ticks, len(names)), bool)
+    for e in sorted(events, key=lambda e: e.at_request):
+        if e.device not in col:
+            continue
+        first = max(e.at_request, 0)
+        if first >= start + ticks:
+            continue
+        alive[first:, col[e.device]] = (e.kind != "crash")
+    return alive[start:]
+
+
+def test_alive_matrix_window_matches_reference():
+    rng = np.random.default_rng(0)
+    names = [f"d{i}" for i in range(6)]
+    for trial in range(20):
+        events = [FailureEvent(int(rng.integers(0, 40)),
+                               names[int(rng.integers(0, 6))],
+                               "crash" if rng.random() < 0.6 else "recover")
+                  for _ in range(25)]
+        for start in (0, 1, 7, 19, 35, 60):
+            got = FailureInjector(list(events)).alive_matrix(names, 12, start)
+            exp = _alive_matrix_reference(events, names, 12, start)
+            np.testing.assert_array_equal(got, exp)
+
+
+def test_alive_matrix_late_window_is_cheap():
+    """A window far into the schedule must allocate only (ticks, N) — the
+    old implementation built (start + ticks, N) and threw the prefix away."""
+    events = [FailureEvent(3, "a"), FailureEvent(50_000_000, "a", "recover")]
+    out = FailureInjector(events).alive_matrix(["a", "b"], 4,
+                                               start=100_000_000)
+    assert out.shape == (4, 2)
+    np.testing.assert_array_equal(out, np.ones((4, 2), bool))
+    out = FailureInjector(events).alive_matrix(["a", "b"], 4, start=10)
+    np.testing.assert_array_equal(out[:, 0], np.zeros(4, bool))
+
+
+# -- quorum_aggregate empty/tiny batches (satellite) --------------------------
+
+def test_quorum_aggregate_empty_batch():
+    import jax.numpy as jnp
+    from repro.kernels.quorum_aggregate import quorum_aggregate
+    p = jnp.zeros((3, 0, 4))
+    w = jnp.ones((3, 4, 5))
+    b = jnp.arange(5.0)
+    out = quorum_aggregate(p, w, b, jnp.ones(3, jnp.int32), interpret=True)
+    assert out.shape == (0, 5)
+
+
+def test_quorum_aggregate_batch_smaller_than_block():
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.quorum_aggregate import quorum_aggregate
+    ks = np.random.default_rng(0)
+    for B in (1, 3, 7):
+        p = jnp.asarray(ks.normal(size=(4, B, 8)).astype(np.float32))
+        w = jnp.asarray(ks.normal(size=(4, 8, 5)).astype(np.float32))
+        b = jnp.asarray(ks.normal(size=5).astype(np.float32))
+        mask = jnp.asarray([1, 0, 1, 1], jnp.int32)
+        out = quorum_aggregate(p, w, b, mask, block_batch=128, interpret=True)
+        exp = ref.quorum_aggregate_ref(p, w, b, mask)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_serve_empty_batch_returns_empty():
+    srv = build_demo_server(_toy_ir(), feat=8, hidden=16, n_classes=3, seed=0)
+    assert srv.serve_batch([]) == []
