@@ -1,0 +1,108 @@
+"""Fused serving fast-path microbenchmark (CI smoke lane).
+
+Direct ``serve_batch`` wall times — no engine, no arrival process — for the
+three deployment modes of the same weights on the shared fleet:
+
+  fastpath/serial/rows*     — the PR-3 per-slot loop (one jitted forward per
+                              partition + host-side stack/mask),
+  fastpath/fused/rows*      — the single-dispatch stacked-student megastep,
+  fastpath/fused_int8/rows* — megastep with weight-only int8 students and
+                              the in-kernel dequant quorum merge,
+  fastpath/speedup          — fused vs serial and int8 vs fused wall ratios
+                              at the largest row count,
+  fastpath/dequant_matmul   — the fused dequant-matmul kernel vs the
+                              equivalent dense fp32 matmul (same shapes).
+
+``us_per_call`` is the median blocked wall of one serve_batch call; the
+engine-level sustained-capacity comparison (equal-p99 throughput) lives in
+``benchmarks/bench_serving.py`` under ``serving/fastpath/*``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (affinity_graph, emit, int8_fidelity,
+                               paper_students)
+from repro.core import planner as PL
+from repro.core.simulator import make_fleet
+
+ROWS = (1, 16, 64)
+REPEATS = 60
+
+
+def _median_wall(fn, repeats: int = REPEATS) -> float:
+    fn()                                   # warmup / compile
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) * 1e6
+
+
+def serve_modes() -> None:
+    from repro.runtime.engine import build_demo_server
+    fleet = make_fleet(8, seed=0, mem_range=(1.0e6, 4e6))
+    ir = PL.tune_d_th_ir(fleet, affinity_graph(32), paper_students(),
+                         p_th=0.3, seed=0)
+    build = dict(feat=64, hidden=128, n_classes=10, seed=0)
+    servers = {
+        "serial": build_demo_server(ir, fastpath=False, **build),
+        "fused": build_demo_server(ir, **build),
+        "fused_int8": build_demo_server(ir, quantize="int8", **build),
+    }
+    walls = {}
+    for rows in ROWS:
+        x = np.random.default_rng(0).standard_normal(
+            (rows, 64)).astype(np.float32)
+        for mode, srv in servers.items():
+            us = _median_wall(lambda srv=srv: srv.serve_batch(
+                [x], rng=np.random.default_rng(0))[0].block_until_ready())
+            walls[(mode, rows)] = us
+            emit(f"fastpath/{mode}/rows{rows}", us,
+                 f"K={ir.K};rows={rows}")
+    top = ROWS[-1]
+    speedup = walls[("serial", top)] / walls[("fused", top)]
+    int8_ratio = walls[("fused", top)] / walls[("fused_int8", top)]
+    emit("fastpath/speedup", 0.0,
+         f"fused_vs_serial={speedup:.2f}x;int8_vs_fused={int8_ratio:.2f}x;"
+         f"rows={top}")
+
+    # int8 fidelity on the same fixed batch
+    agree, rel = int8_fidelity(servers["fused"], servers["fused_int8"],
+                               feat=64)
+    emit("fastpath/int8_accuracy", 0.0,
+         f"top1_agree={agree:.3f};max_rel_err={rel:.4f}")
+
+
+def dequant_matmul_bench() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as K
+    from repro.optim.compression import quantize_weight
+    rng = np.random.default_rng(0)
+    B, D, N = 256, 256, 512
+    x = jnp.asarray(rng.standard_normal((B, D)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((D, N)).astype(np.float32))
+    wq = quantize_weight(w)
+    dense = jax.jit(lambda a, b: a @ b)
+    us_dense = _median_wall(
+        lambda: jax.block_until_ready(dense(x, w)), repeats=30)
+    us_dq = _median_wall(
+        lambda: jax.block_until_ready(K.dequant_matmul(x, wq.q, wq.scale)),
+        repeats=30)
+    emit("fastpath/dequant_matmul", us_dq,
+         f"dense_us={us_dense:.0f};shape={B}x{D}x{N};"
+         f"weight_bytes_ratio=0.25")
+
+
+def main() -> None:
+    serve_modes()
+    dequant_matmul_bench()
+
+
+if __name__ == "__main__":
+    main()

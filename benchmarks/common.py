@@ -54,6 +54,20 @@ def affinity_graph(M: int, seed: int = 0) -> np.ndarray:
     return 0.5 * (A + A.T)
 
 
+def int8_fidelity(fp32_srv, int8_srv, feat: int, rows: int = 256
+                  ) -> tuple:
+    """(top-1 agreement, max relative logit error) of an int8-deployed
+    server vs its fp32 twin on one fixed seed-5 batch — shared by
+    bench_serving and bench_fastpath so their CSV rows cannot diverge."""
+    x = np.random.default_rng(5).standard_normal(
+        (rows, feat)).astype(np.float32)
+    lf = fp32_srv.serve_batch([x], rng=np.random.default_rng(0))[0].logits
+    lq = int8_srv.serve_batch([x], rng=np.random.default_rng(0))[0].logits
+    agree = float((lf.argmax(-1) == lq.argmax(-1)).mean())
+    rel = float(np.abs(lf - lq).max() / max(np.abs(lf).max(), 1e-12))
+    return agree, rel
+
+
 _ENSEMBLE_CACHE: Dict = {}
 _TEACHER_CACHE: Dict = {}
 

@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.roofline",             # fast: reads the dry-run artifact
     "benchmarks.sim_speed",            # Monte-Carlo engine: loop vs vectorized
     "benchmarks.plan_scale",           # PlanIR planner scale + controller
+    "benchmarks.bench_fastpath",       # fused fast path: serial vs fused vs int8
     "benchmarks.bench_serving",        # continuous-batching engine + chaos
     "benchmarks.fig4_redundancy",      # planner only
     "benchmarks.fig7_heterogeneity",   # planner + simulator

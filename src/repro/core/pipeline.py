@@ -133,6 +133,40 @@ class Ensemble:
     teacher_acc: float
     ir: Optional["PlanIR"] = None               # canonical array-backed plan
 
+    def fused_export(self):
+        """Stacked-student export for the serving fast path, or None.
+
+        Students are stackable when they share ONE arch family: identical
+        configs and identical weight-pytree structure/shapes (the planner
+        emits that whenever every partition gets the same zoo entry at the
+        same width — uniform ``part_dims``). The export is a
+        :class:`repro.runtime.serving.FusedStudents`: per-slot weight
+        pytrees plus the single shared forward, which the server stacks
+        along a leading K axis and vmaps over in one compiled megastep.
+        Heterogeneous zoos fall back to the per-slot loop (returns None)."""
+        from repro.runtime.serving import FusedStudents
+        if len(self.students) < 2:
+            return None
+        cfg0, params0, fwd0 = self.students[0]
+        shapes0 = [(l.shape, l.dtype)
+                   for l in jax.tree_util.tree_leaves(params0)]
+        td0 = jax.tree_util.tree_structure(params0)
+        for cfg, params, _ in self.students[1:]:
+            if cfg != cfg0:
+                return None
+            if jax.tree_util.tree_structure(params) != td0:
+                return None
+            if [(l.shape, l.dtype)
+                    for l in jax.tree_util.tree_leaves(params)] != shapes0:
+                return None
+
+        def apply(params, x):
+            _, feats, _ = fwd0(params, cfg0, x)
+            return feats
+
+        return FusedStudents(apply=apply,
+                             params=[p for _, p, _ in self.students])
+
     def portions(self, x: jnp.ndarray, arrived: Optional[np.ndarray] = None
                  ) -> jnp.ndarray:
         outs = []

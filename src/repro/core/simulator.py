@@ -69,6 +69,20 @@ class PlanArrays:
     names: Tuple[str, ...]           # (D,) device names, plan order
     n_slots: int                     # plan.K (incl. student-less slots)
     slot_cols: Tuple[np.ndarray, ...]  # per-slot device-column indices
+    # reduceat group starts when every slot is non-empty and columns are
+    # emitted slot-by-slot (both constructors do); None → ragged layout.
+    # Precomputed because the serving hot path reduces once per micro-batch
+    slot_starts: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.slot_starts is not None or self.n_slots == 0:
+            return
+        lens = np.fromiter((len(c) for c in self.slot_cols), np.int64,
+                           self.n_slots)
+        if (lens.all() and int(lens.sum()) == len(self.slot)
+                and bool((np.diff(self.slot) >= 0).all())):
+            starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+            object.__setattr__(self, "slot_starts", starts)
 
 
 def plan_arrays(plan) -> PlanArrays:
@@ -108,10 +122,19 @@ def reduce_trials(arrays: PlanArrays, alive: np.ndarray,
     if deadline is not None and np.isfinite(deadline):
         eff = np.where(eff <= deadline, eff, np.inf)
     T = alive.shape[0]
-    lat = np.full((T, arrays.n_slots), np.inf)
-    for k, cols in enumerate(arrays.slot_cols):
-        if len(cols):
-            lat[:, k] = eff[:, cols].min(axis=1)
+    # plan_arrays/to_arrays emit replica columns slot by slot, so the
+    # per-slot min collapses to ONE ufunc.reduceat over contiguous column
+    # groups (bit-identical: min over the same floats) — the serving hot
+    # path calls this per micro-batch, where the K-iteration python loop
+    # was measurable. Empty slots (student-less groups) break reduceat's
+    # group encoding; those plans keep the loop.
+    if arrays.slot_starts is not None:
+        lat = np.minimum.reduceat(eff, arrays.slot_starts, axis=1)
+    else:
+        lat = np.full((T, arrays.n_slots), np.inf)
+        for k, cols in enumerate(arrays.slot_cols):
+            if len(cols):
+                lat[:, k] = eff[:, cols].min(axis=1)
     arrived = np.isfinite(lat)
     latency = np.where(arrived.any(axis=1),
                        np.where(arrived, lat, -np.inf).max(axis=1), np.inf)
@@ -154,7 +177,21 @@ class FailureModel:
         stream); here both matrices are drawn unconditionally — a different
         stream layout with the identical aliveness distribution."""
         D = len(arrays.names)
-        forced = frozenset(self.forced_failures or ())
+        if not self.forced_failures:
+            # serving hot path: no forced-down set means every device draws
+            # (or trivially lives) — skip the per-name membership scan and
+            # the masked copy. Stream consumption is unchanged (same draw
+            # shapes as the nf == D general case below)
+            if self.crash_prob > 0 and self.outages:
+                return ((rng.random((trials, D)) >= self.crash_prob)
+                        & (rng.random((trials, D))
+                           >= arrays.p_out[None, :])), None
+            if self.crash_prob > 0:
+                return rng.random((trials, D)) >= self.crash_prob, None
+            if self.outages:
+                return rng.random((trials, D)) >= arrays.p_out[None, :], None
+            return np.ones((trials, D), bool), None
+        forced = frozenset(self.forced_failures)
         free = np.array([n not in forced for n in arrays.names], bool)
         nf = int(free.sum())
         alive = np.zeros((trials, D), bool)

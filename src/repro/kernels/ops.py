@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
+from repro.kernels import dequant_matmul as _dq
 from repro.kernels import flash_attention as _fa
 from repro.kernels import quorum_aggregate as _qa
 from repro.kernels import rmsnorm as _rn
@@ -62,12 +63,26 @@ def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
 
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
-def quorum_aggregate(portions, weights, bias, mask, *, block_batch: int = 128,
+def quorum_aggregate(portions, weights, bias, mask, scales=None, *,
+                     block_batch: int = 128,
                      interpret: Optional[bool] = None):
-    """Fused masked-concat + FC merge of student portions (RoCoIn runtime)."""
-    return _qa.quorum_aggregate(portions, weights, bias, mask,
+    """Fused masked-concat + FC merge of student portions (RoCoIn runtime).
+    Pass int8 ``weights`` with per-slot fp32 ``scales`` (K,) for the
+    quantized-deployment merge (dequant happens in-kernel)."""
+    return _qa.quorum_aggregate(portions, weights, bias, mask, scales,
                                 block_batch=block_batch,
                                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "block_n",
+                                             "interpret"))
+def dequant_matmul(x, q, scale, *, block_batch: int = 128, block_n: int = 256,
+                   interpret: Optional[bool] = None):
+    """Fused weight-dequant matmul ``x @ (q · scale)`` — int8 weights, fp32
+    activations (weight-only quantized portion forwards)."""
+    return _dq.dequant_matmul(x, q, scale, block_batch=block_batch,
+                              block_n=block_n,
+                              interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))

@@ -10,10 +10,17 @@ buffer is never materialized:
 Grid (nb, K): K is sequential, the (bb, C) accumulator lives in scratch.
 Portions are equal-width (planner pads partitions to a common width before
 deployment — TPU-friendly layout).
+
+int8 deployment mode: when ``weights`` is int8, pass per-slot fp32
+``scales`` (K,) and the kernel dequantizes ``W_k`` in-body —
+``W_k = q_k · scale_k`` — so HBM traffic for the merge weights drops 4x
+and the fp32 expansion never leaves VMEM. The fp32 path multiplies by a
+scale of 1.0, which is bit-exact, so both paths share one kernel body.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +30,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import compiler_params
 
 
-def _agg_kernel(mask_ref, p_ref, w_ref, b_ref, o_ref, acc_ref, *, K: int):
+def _agg_kernel(mask_ref, scale_ref, p_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                K: int):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -33,7 +41,8 @@ def _agg_kernel(mask_ref, p_ref, w_ref, b_ref, o_ref, acc_ref, *, K: int):
     @pl.when(mask_ref[k] != 0)
     def _accum():
         p = p_ref[0].astype(jnp.float32)           # (bb, Dk)
-        w = w_ref[0].astype(jnp.float32)           # (Dk, C)
+        # in-kernel dequant: int8 weights expand to fp32 in VMEM only
+        w = w_ref[0].astype(jnp.float32) * scale_ref[k]   # (Dk, C)
         acc_ref[...] += jax.lax.dot_general(
             p, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
@@ -44,13 +53,20 @@ def _agg_kernel(mask_ref, p_ref, w_ref, b_ref, o_ref, acc_ref, *, K: int):
 
 
 def quorum_aggregate(portions: jnp.ndarray, weights: jnp.ndarray,
-                     bias: jnp.ndarray, mask: jnp.ndarray, *,
+                     bias: jnp.ndarray, mask: jnp.ndarray,
+                     scales: Optional[jnp.ndarray] = None, *,
                      block_batch: int = 128, interpret: bool = False
                      ) -> jnp.ndarray:
-    """portions: (K, B, Dk); weights: (K, Dk, C); bias: (C,);
-    mask: (K,) int32 (1 = portion arrived). Returns logits (B, C)."""
+    """portions: (K, B, Dk); weights: (K, Dk, C) fp32 or int8; bias: (C,);
+    mask: (K,) int32 (1 = portion arrived); scales: optional (K,) fp32
+    per-slot dequant scales (required when ``weights`` is int8).
+    Returns logits (B, C)."""
     K, B, Dk = portions.shape
     C = weights.shape[-1]
+    if weights.dtype == jnp.int8 and scales is None:
+        raise ValueError("int8 weights need per-slot fp32 scales")
+    if scales is None:
+        scales = jnp.ones((K,), jnp.float32)
     if B == 0:
         # an empty batch would make bb = 0 and divide the grid by zero;
         # the merge of nothing is the empty logits block
@@ -63,7 +79,7 @@ def quorum_aggregate(portions: jnp.ndarray, weights: jnp.ndarray,
 
     kernel = functools.partial(_agg_kernel, K=K)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(nb, K),
         in_specs=[
             pl.BlockSpec((1, bb, Dk), lambda i, k, *_: (k, i, 0)),
@@ -80,5 +96,6 @@ def quorum_aggregate(portions: jnp.ndarray, weights: jnp.ndarray,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(jnp.asarray(mask, jnp.int32), portions, weights, bias)
+    )(jnp.asarray(mask, jnp.int32), jnp.asarray(scales, jnp.float32),
+      portions, weights, bias)
     return out[:B]

@@ -68,12 +68,22 @@ def rmsnorm_ref(x, scale, *, eps: float = 1e-6) -> jnp.ndarray:
             ).astype(x.dtype)
 
 
-def quorum_aggregate_ref(portions, weights, bias, mask) -> jnp.ndarray:
-    """portions: (K, B, Dk); weights: (K, Dk, C); bias: (C,); mask: (K,)."""
+def quorum_aggregate_ref(portions, weights, bias, mask,
+                         scales=None) -> jnp.ndarray:
+    """portions: (K, B, Dk); weights: (K, Dk, C) fp32 or int8; bias: (C,);
+    mask: (K,); scales: optional (K,) per-slot dequant scales."""
     m = mask.astype(jnp.float32)[:, None, None]
-    out = jnp.einsum("kbd,kdc->bc", portions.astype(jnp.float32) * m,
-                     weights.astype(jnp.float32))
+    w = weights.astype(jnp.float32)
+    if scales is not None:
+        w = w * scales.astype(jnp.float32)[:, None, None]
+    out = jnp.einsum("kbd,kdc->bc", portions.astype(jnp.float32) * m, w)
     return out + bias.astype(jnp.float32)
+
+
+def dequant_matmul_ref(x, q, scale) -> jnp.ndarray:
+    """x: (B, D); q: (D, N) int8; scale: () or (N,) fp32."""
+    w = q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    return x.astype(jnp.float32) @ w
 
 
 def topk_gating_ref(logits, k):

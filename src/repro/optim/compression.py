@@ -47,11 +47,94 @@ def _topk_compress(g: jnp.ndarray, ratio: float) -> jnp.ndarray:
     return (flat * mask).reshape(g.shape)
 
 
+def _int8_scale(w: jnp.ndarray, axis: Optional[int] = None) -> jnp.ndarray:
+    """Symmetric per-tensor scale (``axis=None``) or one scale per slice
+    along ``axis`` (e.g. ``axis=0`` on a stacked (K, ...) weight gives a
+    per-slot scale vector of shape (K,))."""
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        reduce_axes = tuple(d for d in range(w.ndim) if d != axis)
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes)
+    return (jnp.maximum(amax, 1e-12) / 127.0).astype(jnp.float32)
+
+
 def _int8_compress(g: jnp.ndarray, key) -> jnp.ndarray:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    scale = _int8_scale(g)
     noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
     q = jnp.clip(jnp.round(g / scale + noise), -127, 127).astype(jnp.int8)
     return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# weight-only int8 deployment (RoCoIn quantized portion forwards)
+# ---------------------------------------------------------------------------
+
+class Int8Weights(NamedTuple):
+    """A weight tensor stored as int8 values + fp32 scale(s).
+
+    ``scale`` is a scalar for a per-tensor quantized weight, or a (K,)
+    vector when ``q`` carries a leading stacked-student axis (one scale per
+    slot — the layout :func:`repro.kernels.ops.quorum_aggregate` and the
+    fused serving megastep consume)."""
+    q: jnp.ndarray        # int8, same shape as the source weight
+    scale: jnp.ndarray    # f32, () or (q.shape[0],)
+
+
+def quantize_weight(w: jnp.ndarray, axis: Optional[int] = None) -> Int8Weights:
+    """Deterministic round-to-nearest weight quantization (no dithering —
+    weights are quantized once at deploy time, so the stochastic rounding
+    used for gradients would only add bias)."""
+    scale = _int8_scale(w, axis)
+    s = scale if axis is None else jnp.expand_dims(
+        scale, tuple(d for d in range(w.ndim) if d != axis))
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return Int8Weights(q, scale)
+
+
+def dequantize_weight(wq: Int8Weights, axis: Optional[int] = None
+                      ) -> jnp.ndarray:
+    """Inverse of :func:`quantize_weight`. ``axis`` must match the axis the
+    weight was quantized along; the default covers per-tensor and the
+    stacked leading-axis layout. A weight quantized along a NON-leading
+    axis (e.g. per-output-channel for :func:`repro.kernels.ops
+    .dequant_matmul`) must pass that axis explicitly — a silent wrong-axis
+    broadcast is rejected."""
+    s = wq.scale
+    if s.ndim:
+        ax = 0 if axis is None else axis
+        if s.shape[0] != wq.q.shape[ax]:
+            raise ValueError(
+                f"scale of length {s.shape[0]} does not match axis {ax} of "
+                f"the int8 weight {wq.q.shape} — pass the axis it was "
+                f"quantized along")
+        s = jnp.expand_dims(
+            s, tuple(d for d in range(wq.q.ndim) if d != ax))
+    return wq.q.astype(jnp.float32) * s
+
+
+def _is_int8(leaf) -> bool:
+    return isinstance(leaf, Int8Weights)
+
+
+def quantize_tree(params: Any, axis: Optional[int] = None) -> Any:
+    """Quantize every floating-point leaf of a pytree to :class:`Int8Weights`
+    (non-float leaves pass through untouched)."""
+    def one(w):
+        if hasattr(w, "dtype") and jnp.issubdtype(w.dtype, jnp.floating):
+            return quantize_weight(w, axis)
+        return w
+    return jax.tree.map(one, params)
+
+
+def dequantize_tree(params: Any) -> Any:
+    """Inverse of :func:`quantize_tree`: expand Int8Weights leaves back to
+    fp32 (the weight-only deployment path runs this inside the compiled
+    serving megastep, so HBM holds int8 and the dequant is free compute)."""
+    return jax.tree.map(
+        lambda w: dequantize_weight(w) if _is_int8(w) else w,
+        params, is_leaf=_is_int8)
 
 
 def compress_grads(cfg: CompressionConfig, grads: Any,

@@ -243,6 +243,13 @@ class ServingEngine:
                 xs = xs + [self._input(pad_rows)]   # filler request, dropped
         t0 = time.perf_counter()
         results = self.server.serve_batch(xs, rng=self._batch_rng(bid))
+        if self.cfg.service_model is None and results:
+            # serve_batch returns without waiting for the device (the
+            # logits sync is deferred to ServeResult access). In
+            # measured-wall mode the device time IS the service time, so
+            # block inside the timed region; in modelled mode skip the
+            # sync — the next micro-batch overlaps the in-flight one
+            results[0].block_until_ready()
         wall = time.perf_counter() - t0
         if self.cfg.service_model is not None:
             alpha, beta = self.cfg.service_model
@@ -408,7 +415,8 @@ class ServingEngine:
 def build_demo_server(ir, *, feat: int = 32, hidden: int = 64,
                       n_classes: int = 10, seed: int = 0,
                       deadline: float = float("inf"),
-                      failure=None) -> QuorumServer:
+                      failure=None, fastpath: Optional[bool] = None,
+                      quantize: str = "none") -> QuorumServer:
     """A content-addressed toy server for a :class:`PlanIR`: a shared trunk
     (``tanh(x @ W)``), per-partition head columns, and master FC rows indexed
     by filter id. Because every weight is addressed by the partition's filter
@@ -417,8 +425,17 @@ def build_demo_server(ir, *, feat: int = 32, hidden: int = 64,
     full-quorum logits are partition-independent (the merge telescopes to
     ``tanh(x @ trunk) @ head @ wfc + bias``), which makes bit-identity
     checks across migrations meaningful. Used by ``benchmarks/bench_serving``
-    and the migration regression tests."""
+    and the migration regression tests.
+
+    The students trivially share an arch family (one head matmul over the
+    shared trunk), so the server always carries the stacked fused export:
+    per-slot params are the head's partition columns, padded once to the
+    uniform width. ``fastpath=False`` pins the legacy per-slot loop;
+    ``quantize="int8"`` deploys the stacked heads and FC slices weight-only
+    int8."""
     import jax.numpy as jnp
+
+    from repro.runtime.serving import FusedStudents
     M = ir.M
     rng = np.random.default_rng(seed)
     trunk = jnp.asarray(rng.standard_normal((feat, hidden)).astype(np.float32)
@@ -437,9 +454,19 @@ def build_demo_server(ir, *, feat: int = 32, hidden: int = 64,
     def slice_for(mask: np.ndarray):
         return jnp.asarray(wfc[np.flatnonzero(mask)])
 
+    def params_for(mask: np.ndarray):
+        # the slot's weight pytree for the stacked export: its head columns
+        return head[:, jnp.asarray(np.flatnonzero(mask), jnp.int32)]
+
     def redeploy(new_ir, slot: int):
         mask = np.asarray(new_ir.partition[slot])
-        return fn_for(mask), slice_for(mask)
+        return fn_for(mask), slice_for(mask), params_for(mask)
+
+    fused = FusedStudents(
+        apply=lambda p, h: h @ p,
+        params=[params_for(row) for row in ir.partition],
+        pad=lambda p, width: jnp.pad(p, ((0, 0), (0, width - p.shape[-1]))),
+        pre=lambda x: jnp.tanh(x @ trunk))
 
     dims = [max(int(row.sum()), 1) for row in ir.partition]
     Dk = max(dims, default=1)
@@ -457,4 +484,7 @@ def build_demo_server(ir, *, feat: int = 32, hidden: int = 64,
         rng=np.random.default_rng(seed),
         part_dims=tuple(dims),
         redeploy_fn=redeploy,
+        fused=fused,
+        fastpath=fastpath,
+        quantize=quantize,
     )

@@ -18,14 +18,25 @@ Latency accounting uses the paper's Eq. 1a device model; the actual portion
 math runs as real JAX computation, and the merge uses the fused Pallas
 quorum_aggregate kernel.
 
-Hot path: portion functions are jit-compiled ONCE per server (first call per
-input shape) and reused across requests, and :meth:`QuorumServer.serve_batch`
-stacks R requests into a single forward per partition + ONE fused
-quorum_aggregate launch for the whole batch. Per-request failure draws come
-from the same vectorized sampler as the Monte-Carlo engine; a request whose
-partition k missed quorum has its rows of portion k zeroed before the merge —
-bit-identical to a per-request mask because the merge is linear in each
-portion.
+Hot path — the fused fast path: when the ensemble's students share an arch
+family their weights are exported as ONE stacked pytree (leading K axis,
+feature dims padded once at build/migrate time, see :class:`FusedStudents`)
+and :meth:`QuorumServer.serve_batch` dispatches a single jitted megastep
+that vmaps the portion forward over the student axis, applies the arrived
+mask device-side, and flows straight into the fused quorum_aggregate merge
+— one dispatch per micro-batch, zero host round-trips between forward and
+merge, and the result stays on device (:class:`ServeResult` defers the
+host sync until ``.logits`` is read, so the engine can overlap the next
+micro-batch). ``quantize="int8"`` switches to weight-only int8 deployment:
+stacked student weights and FC slices are stored int8 with per-slot fp32
+scales and dequantized inside the compiled program (the merge consumes the
+int8 W_k in-kernel) — ~4x less HBM weight traffic for memory-bound edge
+portions.
+
+The legacy one-forward-per-partition loop stays behind ``fastpath=False``
+as the reference oracle: the fp32 fast path is bit-identical to it at
+fixed seeds (the merge is linear in each portion, and padding only appends
+exact-zero columns).
 """
 from __future__ import annotations
 
@@ -41,15 +52,98 @@ from repro.core.plan_ir import PlanIR
 from repro.core.planner import Plan
 from repro.core.simulator import FailureModel, plan_arrays, reduce_trials
 from repro.kernels import ops as K
+from repro.kernels import quorum_aggregate as _qa
+from repro.optim.compression import (Int8Weights, dequantize_tree,
+                                     quantize_tree, quantize_weight)
 
 
 @dataclasses.dataclass
 class ServeResult:
-    logits: np.ndarray
+    """One request's answer. ``logits`` is lazy: the device array backing
+    the whole micro-batch is held until first access, so callers that only
+    look at quorum metadata (the serving engine) never force a host sync —
+    and ``failed_devices`` is derived on demand from the aliveness row (it
+    is only read by chaos tests)."""
     latency: float
     arrived: np.ndarray           # (K,) bool
     degraded: bool
-    failed_devices: List[str]
+    _logits: Any = dataclasses.field(default=None, repr=False)
+    _span: Optional[Tuple[int, int]] = dataclasses.field(
+        default=None, repr=False)
+    _alive: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    _names: Optional[Sequence[str]] = dataclasses.field(
+        default=None, repr=False)
+    _np_logits: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def logits(self) -> np.ndarray:
+        if self._np_logits is None:
+            x = self._logits
+            if self._span is not None:
+                x = x[self._span[0]:self._span[1]]
+            self._np_logits = np.asarray(x)
+            self._logits = None    # release the shared micro-batch buffer
+        return self._np_logits
+
+    @property
+    def failed_devices(self) -> List[str]:
+        if self._alive is None:
+            return []
+        return [self._names[j] for j in np.flatnonzero(~self._alive)]
+
+    def block_until_ready(self) -> "ServeResult":
+        """Wait for the device computation backing ``logits`` (shared by the
+        whole micro-batch). The engine calls this inside its timed region in
+        measured-wall mode so service times stay honest."""
+        if self._logits is not None:
+            jax.block_until_ready(self._logits)
+        return self
+
+
+@dataclasses.dataclass
+class FusedStudents:
+    """The stacked-student export behind the fused fast path.
+
+    ``apply(slot_params, x) -> (B, Dk)`` is ONE portion forward shared by
+    every slot (students share an arch family); ``params`` holds each
+    slot's UNPADDED weight pytree, and ``pad(slot_params, Dk)`` pads a
+    slot's feature dims to the uniform width (identity when ``None``).
+    Padding happens once at build/migrate time — the serve path sees a
+    single pytree with a leading K axis and vmaps ``apply`` over it.
+
+    ``pre(x)``, when set, is a slot-INDEPENDENT prefix (e.g. a shared
+    trunk) computed once per batch outside the vmap — its output feeds
+    ``apply`` as the second argument, so K-invariant compute is hoisted by
+    construction instead of relying on XLA CSE across the vmapped body."""
+    apply: Callable[[Any, jnp.ndarray], jnp.ndarray]
+    params: List[Any]
+    pad: Optional[Callable[[Any, int], Any]] = None
+    pre: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def padded(self, k: int, width: int) -> Any:
+        p = self.params[k]
+        return self.pad(p, width) if self.pad is not None else p
+
+
+def _stack_trees(trees: Sequence[Any]) -> Any:
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def _is_int8(leaf) -> bool:
+    return isinstance(leaf, Int8Weights)
+
+
+def _set_stacked_row(stacked: Any, k: int, row: Any) -> Any:
+    """Write one slot's (possibly int8-quantized) padded pytree into row
+    ``k`` of the stacked pytree — the single definition both migrate and
+    deploy_slot use, so the int8 row-update semantics cannot diverge."""
+    def put(leaf, new_leaf):
+        if _is_int8(leaf):
+            return Int8Weights(leaf.q.at[k].set(new_leaf.q),
+                               leaf.scale.at[k].set(new_leaf.scale))
+        return leaf.at[k].set(new_leaf)
+    return jax.tree.map(put, stacked, row, is_leaf=_is_int8)
 
 
 @dataclasses.dataclass
@@ -68,16 +162,31 @@ class QuorumServer:
     # reported degraded until deploy_slot pushes real weights
     zeroed_slots: frozenset = frozenset()
     # content-addressed weight store: (new_ir, slot) -> (portion_fn, fc_slice)
-    # for the slot's partition, or None when no weights exist for it. Used by
-    # :meth:`migrate` to rebuild slots whose partition mask changed.
-    redeploy_fn: Optional[Callable[[PlanIR, int],
-                                   Optional[Tuple[Callable, jnp.ndarray]]]] = None
+    # or (portion_fn, fc_slice, slot_params) for the slot's partition, or
+    # None when no weights exist for it. Used by :meth:`migrate` to rebuild
+    # slots whose partition mask changed (slot_params feeds the fused path).
+    redeploy_fn: Optional[Callable[[PlanIR, int], Optional[Tuple]]] = None
+    # fused fast path: stacked-student export; None → legacy per-slot loop.
+    fused: Optional[FusedStudents] = None
+    # None = auto (fused whenever an export exists); False pins the legacy
+    # per-slot loop (the reference oracle for equivalence tests)
+    fastpath: Optional[bool] = None
+    quantize: str = "none"        # none | int8 (weight-only deployment)
     _jitted: Optional[List[Optional[Callable]]] = dataclasses.field(
         default=None, init=False, repr=False)
+    _jit_dk: int = dataclasses.field(default=-1, init=False, repr=False)
     _arrays: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False)
     _ir: Optional[PlanIR] = dataclasses.field(
         default=None, init=False, repr=False)
+    _fused_stacked: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _fused_step: Optional[Callable] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _fc_q: Optional[Int8Weights] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _det_cache: Dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False)
     last_migration: Optional[Dict] = dataclasses.field(
         default=None, init=False, repr=False)
 
@@ -85,14 +194,21 @@ class QuorumServer:
 
     @property
     def jitted_portions(self) -> List[Callable]:
-        """Portion forwards, jit'd once and reused for every request.
-        Slots invalidated by a migration (None entries) re-jit lazily;
-        untouched slots keep their compiled function."""
-        if self._jitted is None:
+        """Portion forwards for the legacy loop, jit'd once and reused for
+        every request. Each wrapper pads its output to the uniform slice
+        width INSIDE the compiled function, so padding costs one trace at
+        construction/migration instead of a ``jnp.pad`` dispatch per
+        request. Slots invalidated by a migration (None entries) re-jit
+        lazily; untouched slots keep their compiled function. A change of
+        the uniform width invalidates every wrapper."""
+        Dk = int(self.fc_weights.shape[1])
+        if self._jitted is None or self._jit_dk != Dk:
             self._jitted = [None] * len(self.portion_fns)
+            self._jit_dk = Dk
         for i, fn in enumerate(self._jitted):
             if fn is None:
-                self._jitted[i] = jax.jit(self.portion_fns[i])
+                self._jitted[i] = jax.jit(_padded_portion(
+                    self.portion_fns[i], Dk))
         return self._jitted
 
     @property
@@ -111,6 +227,73 @@ class QuorumServer:
             self._arrays = plan_arrays(self.plan)
         return self._arrays
 
+    @property
+    def fastpath_active(self) -> bool:
+        """True when serve_batch will take the single-dispatch fused path."""
+        if self.fastpath is False:
+            return False
+        if self.fastpath and self.fused is None:
+            raise ValueError("fastpath=True but the server has no stacked "
+                             "student export (fused=None)")
+        return self.fused is not None
+
+    def _ensure_fused(self) -> Tuple[Any, Callable]:
+        """Build (lazily) the stacked weight pytree — quantized to int8 when
+        ``quantize='int8'`` — and the compiled megastep."""
+        if self._fused_stacked is None:
+            Dk = int(self.fc_weights.shape[1])
+            padded = [self.fused.padded(k, Dk)
+                      for k in range(len(self.fused.params))]
+            stacked = _stack_trees(padded)
+            if self.quantize == "int8":
+                stacked = quantize_tree(stacked, axis=0)
+            self._fused_stacked = stacked
+        if self._fc_q is None and self.quantize == "int8":
+            self._fc_q = quantize_weight(self.fc_weights, axis=0)
+        if self._fused_step is None:
+            self._fused_step = self._build_fused_step()
+        return self._fused_stacked, self._fused_step
+
+    def _build_fused_step(self) -> Callable:
+        """ONE compiled program for the whole micro-batch: (optional int8
+        dequant →) vmapped portion forward over the stacked K axis →
+        device-side per-row arrived mask → fused quorum_aggregate merge.
+        No host round-trip between forward and merge; the per-call mask
+        buffers are donated so XLA reuses them as scratch."""
+        apply = self.fused.apply
+        pre = self.fused.pre
+        int8 = self.quantize == "int8"
+        interpret = jax.default_backend() != "tpu"
+
+        def step(stacked, x, row_mask, any_mask, fc_w, fc_scales, fc_b, *,
+                 masked):
+            params = dequantize_tree(stacked) if int8 else stacked
+            if pre is not None:
+                x = pre(x)                   # shared trunk: once, not K times
+            portions = jax.vmap(apply, in_axes=(0, None))(params, x)
+            if masked:
+                # masks arrive as the sampler's raw numpy bools —
+                # converting INSIDE the program keeps the host path free of
+                # eager dispatches (an eager jnp.asarray costs ~100µs per
+                # call). The all-arrived batch skips the multiply entirely
+                # (static masked=False) — multiplying by 1.0 is bit-exact,
+                # so both traces serve identical logits
+                portions = portions * row_mask.T[:, :, None].astype(
+                    portions.dtype)
+            return _qa.quorum_aggregate(portions, fc_w, fc_b, any_mask,
+                                        fc_scales, interpret=interpret)
+
+        # donating on CPU only triggers a "not implemented" warning
+        donate = (("row_mask", "any_mask")
+                  if jax.default_backend() != "cpu" else ())
+        return jax.jit(step, static_argnames=("masked",),
+                       donate_argnames=donate)
+
+    def _invalidate_fused(self) -> None:
+        self._fused_stacked = None
+        self._fused_step = None
+        self._fc_q = None
+
     # -- serving -------------------------------------------------------------
 
     def serve(self, x: jnp.ndarray, *,
@@ -120,9 +303,13 @@ class QuorumServer:
     def serve_batch(self, xs: Sequence[jnp.ndarray], *,
                     rng: Optional[np.random.Generator] = None
                     ) -> List[ServeResult]:
-        """Serve R stacked requests with ONE portion forward per partition and
-        ONE quorum_aggregate launch. Failures are drawn per request (one
-        vectorized sample for the whole batch).
+        """Serve R stacked requests. On the fused fast path this is ONE
+        jitted dispatch (stacked portion forwards + device-side masking +
+        quorum merge in a single compiled program); the legacy flag path
+        issues one forward per partition + one quorum_aggregate launch.
+        Failures are drawn per request (one vectorized sample for the whole
+        batch), and results are returned WITHOUT waiting for the device —
+        the logits sync is deferred to :class:`ServeResult` access.
 
         ``rng`` overrides the server's shared generator — the continuous
         -batching engine hands every micro-batch its own spawned stream, so
@@ -130,76 +317,130 @@ class QuorumServer:
         ticks and migrations interleave with dispatches.
 
         Re-entrant with :meth:`migrate`: all compiled state (portion
-        forwards, FC slices, plan arrays) is snapshotted before any compute,
-        and migration installs fresh objects instead of mutating shared
-        ones — an in-flight batch finishes on the plan it was dispatched
-        under while queued requests pick up the migrated plan."""
+        forwards, stacked pytree, FC slices, plan arrays) is snapshotted
+        before any compute, and migration installs fresh objects instead of
+        mutating shared ones — an in-flight batch finishes on the plan it
+        was dispatched under while queued requests pick up the migrated
+        plan."""
         R = len(xs)
         if R == 0:
             return []
         # -- migration handoff snapshot (one read of every mutable field) ----
-        jitted = self.jitted_portions          # fully-compiled private list
+        fastpath = self.fastpath_active
+        if fastpath:
+            stacked, step = self._ensure_fused()
+            fc_q = self._fc_q
+            jitted = None
+        else:
+            jitted = self.jitted_portions      # fully-compiled private list
+            stacked = step = fc_q = None
         fc_weights, fc_bias = self.fc_weights, self.fc_bias
         arrays = self.arrays
         failure = self.failure
         knowledge_gap = bool(self.zeroed_slots)
         rng = self.rng if rng is None else rng
-        Kp = len(jitted)
+        # slot count from the SNAPSHOT (a re-read of portion_fns could see a
+        # concurrent migration's new slot count against the old jitted list)
+        Kp = len(jitted) if jitted is not None else len(fc_weights)
 
         sizes = [int(x.shape[0]) for x in xs]
         offs = np.concatenate([[0], np.cumsum(sizes)])
         # stack requests in numpy: an eager jnp.concatenate compiles one XLA
         # program per DISTINCT tuple of request shapes, which under
         # continuous batching (heterogeneous sizes) means a ~20ms recompile
-        # on almost every micro-batch
-        x_all = xs[0] if R == 1 else jnp.asarray(
-            np.concatenate([np.asarray(x) for x in xs], axis=0))
+        # on almost every micro-batch. The stack stays numpy — the jit
+        # boundary devices it once, on the fast path
+        x_all = xs[0] if R == 1 else np.concatenate(
+            [np.asarray(x) for x in xs], axis=0)
         B = int(offs[-1])
 
-        alive, delay = failure.sample(rng, arrays, R)
         # a scenario deadline can only TIGHTEN the server's own SLO deadline
         # (taking the min) — it must never loosen it
         deadline = self.deadline
         scenario_deadline = getattr(failure, "deadline", None)
         if scenario_deadline is not None:
             deadline = min(deadline, scenario_deadline)
-        _, arrived, latency = reduce_trials(arrays, alive, delay, deadline)
+        # a fully deterministic failure model (no forced set, no crash, no
+        # outage channel) draws nothing and always yields the same per-row
+        # outcome for a given (plan, deadline) — memoize it instead of
+        # re-sampling and re-reducing per micro-batch (this path is the
+        # failure-free hot loop; the generator is untouched either way, so
+        # the cached rows are bit-identical to the computed ones)
+        if (type(failure) is FailureModel and not failure.forced_failures
+                and failure.crash_prob == 0 and not failure.outages):
+            alive1, arrived1, lat1 = self._deterministic_outcome(
+                arrays, deadline)
+            alive = np.broadcast_to(alive1, (R, alive1.shape[0]))
+            arrived = np.broadcast_to(arrived1, (R, arrived1.shape[0]))
+            latency = np.broadcast_to(lat1, (R,))
+        else:
+            alive, delay = failure.sample(rng, arrays, R)
+            _, arrived, latency = reduce_trials(arrays, alive, delay,
+                                                deadline)
 
         # per-sample row mask: request r's rows of portion k are zeroed when
-        # k missed r's quorum (linear merge ⇒ exact per-request masking)
-        row_arrived = np.repeat(arrived, sizes, axis=0)     # (B, K)
+        # k missed r's quorum (linear merge ⇒ exact per-request masking).
+        # The clean (all-arrived) batch skips building the (B, K) mask
+        clean = bool(arrived.all())
+        row_arrived = None if clean else np.repeat(arrived, sizes, axis=0)
         any_arrived = arrived.any(axis=0)                   # (K,)
 
-        Dk = fc_weights.shape[1]
-        portions = []
-        for kslot in range(Kp):
-            if not any_arrived[kslot]:
-                portions.append(jnp.zeros((B, Dk), jnp.float32))
-                continue
-            p = jitted[kslot](x_all)
-            if p.shape[-1] < Dk:          # pad to the uniform width
-                p = jnp.pad(p, ((0, 0), (0, Dk - p.shape[-1])))
-            if not row_arrived[:, kslot].all():
-                p = p * jnp.asarray(row_arrived[:, kslot, None], p.dtype)
-            portions.append(p)
-        stacked = jnp.stack(portions)          # (K, B, Dk)
-        logits = np.asarray(K.quorum_aggregate(
-            stacked, fc_weights, fc_bias,
-            jnp.asarray(any_arrived, jnp.int32)))
+        if fastpath:
+            if fc_q is not None:
+                fc_w, fc_scales = fc_q.q, fc_q.scale
+            else:
+                fc_w, fc_scales = fc_weights, None
+            # numpy operands cross the jit boundary directly (fast-path
+            # device_put) — no eager conversions before the single dispatch
+            logits = step(stacked, x_all, row_arrived, any_arrived,
+                          fc_w, fc_scales, fc_bias, masked=not clean)
+        else:
+            Dk = fc_weights.shape[1]
+            x_dev = jnp.asarray(x_all)     # one host→device put for K calls
+            portions = []
+            for kslot in range(Kp):
+                if not any_arrived[kslot]:
+                    portions.append(jnp.zeros((B, Dk), jnp.float32))
+                    continue
+                p = jitted[kslot](x_dev)       # padded to Dk inside the jit
+                if not clean and not row_arrived[:, kslot].all():
+                    p = p * jnp.asarray(row_arrived[:, kslot, None], p.dtype)
+                portions.append(p)
+            stacked_p = jnp.stack(portions)        # (K, B, Dk)
+            logits = K.quorum_aggregate(
+                stacked_p, fc_weights, fc_bias,
+                jnp.asarray(any_arrived, jnp.int32))
 
-        results = []
-        for r in range(R):
-            failed = [arrays.names[j] for j in np.flatnonzero(~alive[r])]
-            results.append(ServeResult(
-                logits=logits[offs[r]:offs[r + 1]],
-                latency=float(latency[r]),
-                arrived=arrived[r],
-                # a migration-zeroed slot contributes nothing even when its
-                # replicas arrive — that answer is degraded, not complete
-                degraded=not arrived[r].all() or knowledge_gap,
-                failed_devices=failed,
-            ))
-        return results
+        # one vectorized pass extracts every per-request scalar (the old
+        # per-request float()/all() calls were measurable at batch 32)
+        lat_list = latency.tolist()
+        complete = arrived.all(axis=1).tolist()
+        offs_list = offs.tolist()
+        return [ServeResult(
+            latency=lat_list[r],
+            arrived=arrived[r],
+            # a migration-zeroed slot contributes nothing even when its
+            # replicas arrive — that answer is degraded, not complete
+            degraded=not complete[r] or knowledge_gap,
+            _logits=logits,
+            _span=(offs_list[r], offs_list[r + 1]),
+            _alive=alive[r],
+            _names=arrays.names,
+        ) for r in range(R)]
+
+    def _deterministic_outcome(self, arrays, deadline: float):
+        """One cached (alive row, arrived row, latency) for the
+        deterministic failure-free model. Keyed by the PlanArrays object —
+        migrations install a fresh object, so stale plans can't hit."""
+        key = (id(arrays), deadline)
+        hit = self._det_cache.get(key)
+        if hit is None or hit[0] is not arrays:
+            alive = np.ones((1, len(arrays.names)), bool)
+            _, arrived, latency = reduce_trials(arrays, alive, None,
+                                                deadline)
+            hit = (arrays, alive[0], arrived[0], latency)
+            self._det_cache[key] = hit
+        return hit[1], hit[2], hit[3]
 
     # -- elastic re-planning -------------------------------------------------
 
@@ -215,17 +456,25 @@ class QuorumServer:
         partition, and multiplying them into the stale slot's FC columns
         produced wrong logits. Instead the slice is rebuilt from the
         content-addressed weight store (:attr:`redeploy_fn`, which also
-        supplies the matching portion forward); when no weights exist for the
-        new partition the slice is zeroed — the slot contributes nothing
-        until real weights arrive via :meth:`deploy_slot` — and the mapped
-        slot's student stays deployed as the placement-only warm start.
+        supplies the matching portion forward and — for fused servers — the
+        slot's weight pytree); when no weights exist for the new partition
+        the slice is zeroed — the slot contributes nothing until real
+        weights arrive via :meth:`deploy_slot` — and the mapped slot's
+        student stays deployed as the placement-only warm start.
+
+        The fused fast path keeps its incremental-repair guarantee: only the
+        touched rows of the stacked pytree are rebuilt (untouched rows are
+        gathered in place), the compiled megastep survives whenever shapes
+        are unchanged, and a store that cannot supply a refit slot's weight
+        pytree drops the server back to the legacy loop instead of serving
+        wrong fused weights.
 
         Out-of-range ``mapping`` sources raise ``ValueError`` (they used to
         be silently clamped to the last slot). Returns and stores migration
         stats: ``rejitted_slots`` (compiled forward invalidated — exactly
         the store-refit slots), ``reused_slots`` (mask unchanged, everything
         kept), ``refit_slots``, ``zeroed_slots`` (forward kept compiled,
-        FC zeroed).
+        FC zeroed), ``fused_rows_rebuilt`` (stacked rows rewritten).
 
         Thread-safe against in-flight :meth:`serve_batch` calls: every field
         is replaced with a freshly-built object, never mutated in place."""
@@ -238,10 +487,14 @@ class QuorumServer:
         old_dims = list(self.part_dims) if self.part_dims is not None else \
             [int(self.fc_weights.shape[1])] * old_count
         C = int(self.fc_weights.shape[2])
+        fused = self.fused
+        fused_ok = fused is not None
         new_fns: List[Callable] = []
         new_jit: List[Optional[Callable]] = []
         slices: List[jnp.ndarray] = []
         dims: List[int] = []
+        fused_params: List[Any] = []
+        srcs: List[int] = []
         rejit, refit, zeroed = [], [], []
         for k in range(K_new):
             if k in mapping:
@@ -263,6 +516,9 @@ class QuorumServer:
                 new_jit.append(old_jit[src])
                 slices.append(self.fc_weights[src])
                 dims.append(old_dims[src])
+                if fused_ok:
+                    fused_params.append(fused.params[src])
+                srcs.append(src)
                 if src in self.zeroed_slots:
                     zeroed.append(k)   # carried slice is still all-zero:
                                        # the knowledge gap survives the move
@@ -270,12 +526,21 @@ class QuorumServer:
             weights = (self.redeploy_fn(new_ir, k)
                        if self.redeploy_fn is not None else None)
             if weights is not None:
-                fn, fc_slice = weights
+                fn, fc_slice = weights[0], weights[1]
+                slot_params = weights[2] if len(weights) > 2 else None
                 fc_slice = jnp.asarray(fc_slice, jnp.float32)
                 new_fns.append(fn)
                 new_jit.append(None)
                 slices.append(fc_slice)
                 dims.append(int(fc_slice.shape[0]))
+                if fused_ok:
+                    if slot_params is None:
+                        # the store cannot feed the stacked pytree: fall
+                        # back to the (always-correct) legacy loop
+                        fused_ok = False
+                    else:
+                        fused_params.append(slot_params)
+                srcs.append(-1)
                 rejit.append(k)
                 refit.append(k)
             elif src >= 0:
@@ -286,14 +551,31 @@ class QuorumServer:
                 new_jit.append(old_jit[src])
                 slices.append(jnp.zeros_like(self.fc_weights[src]))
                 dims.append(old_dims[src])     # the deployed forward's width
+                if fused_ok:
+                    fused_params.append(fused.params[src])
+                srcs.append(src)
                 zeroed.append(k)
             else:
                 raise ValueError(
                     f"slot {k} has no mapping source and the weight store "
                     f"holds nothing for its partition")
         Dk = max([int(s.shape[0]) for s in slices], default=1)
+        Dk_old = int(self.fc_weights.shape[1])
         padded = [s if s.shape[0] == Dk
                   else jnp.pad(s, ((0, Dk - s.shape[0]), (0, 0))) for s in slices]
+        if Dk != Dk_old:
+            # carried legacy wrappers pad to the old uniform width
+            new_jit = [None] * K_new
+            if fused_ok and fused.pad is None:
+                # a pad-less export (uniform-width ensembles) cannot follow
+                # a width change — fall back to the legacy loop
+                fused_ok = False
+        new_fused = (FusedStudents(fused.apply, fused_params, fused.pad,
+                                   fused.pre)
+                     if fused_ok else None)
+        new_stacked = (self._migrated_stacked(new_fused, srcs, refit, Dk,
+                                              Dk_old, K_new, old_count)
+                       if fused_ok else None)
         self.portion_fns = new_fns
         self._jitted = new_jit
         self.fc_weights = (jnp.stack(padded) if padded
@@ -303,19 +585,67 @@ class QuorumServer:
         self.plan = new_ir
         self._ir = new_ir
         self._arrays = None
+        self._det_cache = {}       # keyed by the replaced PlanArrays object
+        if new_fused is None and fused is not None and self.fastpath:
+            # the export was dropped mid-migration (store without slot
+            # params / width change on a pad-less export): un-pin the
+            # explicit fastpath=True so serving falls back to the legacy
+            # loop instead of raising at the next serve_batch
+            self.fastpath = None
+        self.fused = new_fused
+        self._fused_stacked = new_stacked
+        self._fc_q = None                       # re-quantized lazily
+        if new_fused is None:
+            self._fused_step = None
         self.last_migration = {"rejitted_slots": tuple(rejit),
                                "reused_slots": K_new - len(rejit) - len(zeroed),
                                "refit_slots": tuple(refit),
-                               "zeroed_slots": tuple(zeroed)}
+                               "zeroed_slots": tuple(zeroed),
+                               "fused_rows_rebuilt":
+                                   tuple(refit) if fused_ok else ()}
         return self.last_migration
 
-    def deploy_slot(self, k: int, fn: Callable,
-                    fc_slice: jnp.ndarray) -> None:
+    def _migrated_stacked(self, new_fused: FusedStudents, srcs: List[int],
+                          refit: List[int], Dk: int, Dk_old: int,
+                          K_new: int, old_count: int) -> Optional[Any]:
+        """Rebuild ONLY the touched rows of the stacked pytree: carried rows
+        are gathered from the old stack (no re-pad, no re-quantize), refit
+        rows are padded/quantized fresh and written with ``.at[k].set``. A
+        width or slot-count change forces a full restack (lazily, on the
+        next serve)."""
+        old = self._fused_stacked
+        if old is None:
+            return None                    # nothing built yet — stay lazy
+        if Dk != Dk_old:
+            return None                    # width changed: full restack
+        refit_set = set(refit)
+        # carried rows gather from their src; refit rows are overwritten
+        # below, so any in-range placeholder works for them
+        gather = np.asarray([s if s >= 0 else 0 for s in srcs], np.int64)
+        int8 = self.quantize == "int8"
+
+        def take(leaf):
+            if _is_int8(leaf):
+                return Int8Weights(leaf.q[gather], leaf.scale[gather])
+            return leaf[gather]
+
+        stacked = jax.tree.map(take, old, is_leaf=_is_int8)
+        for k in refit_set:
+            row = new_fused.padded(k, Dk)
+            stacked = _set_stacked_row(
+                stacked, k, quantize_tree(row) if int8 else row)
+        return stacked
+
+    def deploy_slot(self, k: int, fn: Callable, fc_slice: jnp.ndarray,
+                    params: Optional[Any] = None) -> None:
         """Push (re-)distilled weights for slot ``k`` — the deployment
         layer's handshake for slots a migration left zeroed. Installs the
-        portion forward (jit'd lazily) and the FC slice, growing the uniform
-        slice width when needed. Re-entrant with in-flight serves (fresh
-        objects, no in-place mutation)."""
+        portion forward (jit'd lazily), the FC slice, and — for fused
+        servers — the slot's weight pytree (only that row of the stacked
+        pytree is rewritten). Omitting ``params`` on a fused server drops
+        it back to the legacy loop (the stacked export would be stale).
+        Grows the uniform slice width when needed. Re-entrant with
+        in-flight serves (fresh objects, no in-place mutation)."""
         if not 0 <= k < len(self.portion_fns):
             raise ValueError(f"slot {k} out of range "
                              f"(server holds {len(self.portion_fns)})")
@@ -323,7 +653,8 @@ class QuorumServer:
         d = int(fc_slice.shape[0])
         Dk = int(self.fc_weights.shape[1])
         weights = self.fc_weights
-        if d > Dk:
+        grew = d > Dk
+        if grew:
             weights = jnp.pad(weights, ((0, 0), (0, d - Dk), (0, 0)))
             Dk = d
         if d < Dk:
@@ -334,12 +665,36 @@ class QuorumServer:
         self.portion_fns = fns
         jit = list(self._jitted or [None] * len(fns))
         jit[k] = None
-        self._jitted = jit
+        self._jitted = jit if not grew else [None] * len(fns)
         if self.part_dims is not None:
             dims = list(self.part_dims)
             dims[k] = d
             self.part_dims = tuple(dims)
         self.zeroed_slots = self.zeroed_slots - {k}
+        if self.fused is not None:
+            if params is None or (grew and self.fused.pad is None):
+                # no slot pytree supplied, or the uniform width grew under a
+                # pad-less export (its rows cannot be re-padded): the
+                # stacked export would be stale — serve the legacy loop
+                # (and un-pin an explicit fastpath=True so serving keeps
+                # working instead of raising at the next batch)
+                if self.fastpath:
+                    self.fastpath = None
+                self.fused = None
+                self._invalidate_fused()
+                return
+            new_params = list(self.fused.params)
+            new_params[k] = params
+            self.fused = FusedStudents(self.fused.apply, new_params,
+                                       self.fused.pad, self.fused.pre)
+            if self._fused_stacked is not None and not grew:
+                row = self.fused.padded(k, Dk)
+                self._fused_stacked = _set_stacked_row(
+                    self._fused_stacked, k,
+                    quantize_tree(row) if self.quantize == "int8" else row)
+            else:
+                self._fused_stacked = None
+        self._fc_q = None
 
     def remove_device(self, name: str, *, repair: bool = True):
         """Permanent loss. With ``repair=True`` (default) the loss routes
@@ -362,6 +717,7 @@ class QuorumServer:
                     g.devices = [d for d in g.devices if d.name != name]
                 self._ir = None
             self._arrays = None
+            self._det_cache = {}
             return None
         from repro.runtime.controller import ClusterController
         ctl = ClusterController(self.ir, server=self)
@@ -374,16 +730,29 @@ class QuorumServer:
         return [d for g in self.plan.groups for d in g.devices]
 
 
+def _padded_portion(fn: Callable, width: int) -> Callable:
+    def padded(x):
+        p = fn(x)
+        if p.shape[-1] < width:
+            p = jnp.pad(p, ((0, 0), (0, width - p.shape[-1])))
+        return p
+    return padded
+
+
 def server_from_ensemble(ens, deadline: float = float("inf"),
                          failure: Optional[FailureModel] = None,
-                         seed: int = 0) -> QuorumServer:
+                         seed: int = 0, fastpath: Optional[bool] = None,
+                         quantize: str = "none") -> QuorumServer:
     """Build a QuorumServer from a core.pipeline.Ensemble.
 
     The server carries a content-addressed weight store over the ensemble's
     distilled students (keyed by partition filter set): a migration onto a
     plan whose partition matches one the ensemble was distilled for refits
     that slot's portion forward AND FC slice from the store instead of
-    serving stale columns."""
+    serving stale columns. When the ensemble's students are stackable (one
+    arch family, see :meth:`repro.core.pipeline.Ensemble.fused_export`) the
+    server also gets the fused fast path; ``quantize="int8"`` deploys the
+    stacked students and FC slices weight-only quantized."""
     Dk = max(ens.part_dims)
     C = ens.fc["bias"].shape[0]
     Kp = len(ens.students)
@@ -402,9 +771,10 @@ def server_from_ensemble(ens, deadline: float = float("inf"),
         return fn
 
     portion_fns = [make_fn(i) for i in range(Kp)]
+    fused = ens.fused_export() if hasattr(ens, "fused_export") else None
     ir = getattr(ens, "ir", None)
     groups = sorted(ens.plan.groups, key=lambda g: g.partition_idx)
-    store: Dict[frozenset, Tuple[Callable, jnp.ndarray]] = {}
+    store: Dict[frozenset, Tuple] = {}
     for kslot in range(Kp):
         if ir is not None and kslot < ir.K:
             filters = np.flatnonzero(ir.partition[kslot])
@@ -412,7 +782,8 @@ def server_from_ensemble(ens, deadline: float = float("inf"),
             filters = np.asarray(groups[kslot].filters, np.int64)
         store[frozenset(filters.tolist())] = (
             portion_fns[kslot],
-            jnp.asarray(weights[kslot, :ens.part_dims[kslot]]))
+            jnp.asarray(weights[kslot, :ens.part_dims[kslot]]),
+            fused.params[kslot] if fused is not None else None)
 
     def redeploy(new_ir: PlanIR, slot: int):
         key = frozenset(np.flatnonzero(new_ir.partition[slot]).tolist())
@@ -428,4 +799,7 @@ def server_from_ensemble(ens, deadline: float = float("inf"),
         rng=np.random.default_rng(seed),
         part_dims=tuple(int(d) for d in ens.part_dims),
         redeploy_fn=redeploy,
+        fused=fused,
+        fastpath=fastpath,
+        quantize=quantize,
     )

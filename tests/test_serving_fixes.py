@@ -122,8 +122,8 @@ def test_deploy_slot_restores_zeroed_slot():
     new_ir = srv.ir.with_(partition=new_part)
     srv.migrate(new_ir, {0: 0, 1: 1})
     for k in (0, 1):                              # push the true weights
-        fn, fc = store(new_ir, k)
-        srv.deploy_slot(k, fn, fc)
+        fn, fc, params = store(new_ir, k)
+        srv.deploy_slot(k, fn, fc, params)
     assert srv.zeroed_slots == frozenset()        # gap closed
     fresh = build_demo_server(new_ir, feat=8, hidden=16, n_classes=3, seed=0)
     r = srv.serve_batch([x], rng=np.random.default_rng(7))[0]
