@@ -3,12 +3,18 @@ excluding replicas) under different redundancy modes (p^th values).
 
 Planner-only: smaller p^th ⇒ more replicas ⇒ larger S-Total/S-Valid ratio
 (better resilience, lower resource-utilization efficiency).
+
+The coded arm puts erasure coding on the same figure at EQUAL device
+budget: each replicated plan is re-spent by ``select_redundancy`` (freed
+replicas fund parity shares on the same fleet), and the row reports the
+coded S-Total and the deployed-compute ratio vs replicate-K.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, timed
+from repro.coding.planner import select_redundancy
 from repro.core import planner as PL
 from repro.core.assignment import StudentArch
 from repro.core.simulator import make_fleet
@@ -26,17 +32,27 @@ def main() -> None:
         StudentArch("big", 5e7, 3.5e6, 64, 1.2e6),
     ]
     fleet = make_fleet(8, seed=2, success_prob=0.8)
-    prev_ratio = None
     for p_th in (0.5, 0.25, 0.1, 0.05):
         def run():
-            return PL.tune_d_th(fleet, A, students, p_th=p_th)
-        plan, us = timed(run, repeats=1)
-        s_total, s_valid = plan.total_params(), plan.valid_params()
+            return PL.tune_d_th_ir(fleet, A, students, p_th=p_th)
+        ir, us = timed(run, repeats=1)
+        s_total, s_valid = ir.total_params(), ir.valid_params()
         ratio = s_valid / max(s_total, 1e-9)
         emit(f"fig4/pth{p_th}", us,
              f"s_total={s_total/4e6:.2f}M;s_valid={s_valid/4e6:.2f}M;"
-             f"valid_ratio={ratio:.2f};K={plan.K}")
-        prev_ratio = ratio
+             f"valid_ratio={ratio:.2f};K={ir.K}")
+        # coded arm: same fleet, same partitions, freed replicas fund parity
+        coded = select_redundancy(ir, code_k=max(ir.K, 2))
+        if coded.coding is None:
+            emit(f"fig4/pth{p_th}/coded", 0.0, "uncoded=1")
+            continue
+        c_total = coded.total_params()
+        c_ratio = coded.valid_params() / max(c_total, 1e-9)
+        emit(f"fig4/pth{p_th}/coded", 0.0,
+             f"s_total={c_total/4e6:.2f}M;valid_ratio={c_ratio:.2f};"
+             f"compute_ratio="
+             f"{coded.deployed_compute() / max(ir.deployed_compute(), 1e-9):.2f};"
+             f"modes={'|'.join(sorted(set(coded.redundancy_modes())))}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.plan_scale",           # PlanIR planner scale + controller
     "benchmarks.bench_fastpath",       # fused fast path: serial vs fused vs int8
     "benchmarks.bench_serving",        # continuous-batching engine + chaos
+    "benchmarks.bench_coding",         # replicate-K vs coded-(n,k) redundancy
     "benchmarks.fig4_redundancy",      # planner only
     "benchmarks.fig7_heterogeneity",   # planner + simulator
     "benchmarks.fig3_latency",         # simulator + one trained ensemble

@@ -1,0 +1,43 @@
+"""Coded-redundancy subsystem: erasure-coded distributed inference.
+
+Layers:
+  - :mod:`repro.coding.codes`   — systematic MDS generators, encode/decode
+    numpy reference, Poisson-binomial reliability DP;
+  - :mod:`repro.coding.spec`    — :class:`CodingSpec`, the array-backed
+    per-plan coding layout a :class:`~repro.core.plan_ir.PlanIR` carries;
+  - :mod:`repro.coding.planner` — ``select_redundancy``, the mode-selection
+    pass picking replication vs coding per group;
+  - :mod:`repro.coding.runtime` — ``CodedRuntime``, the serving-side encode
+    matrix + memoized per-arrival-pattern decode weights.
+
+``planner``/``runtime`` import the core plan IR, which itself imports
+``spec`` — they are loaded lazily here so the package stays importable
+from inside :mod:`repro.core.plan_ir`.
+"""
+from repro.coding.codes import (MDSCode, arrival_shortfall_prob,
+                                cauchy_generator, decode_matrix,
+                                decode_outputs, encode_outputs,
+                                make_generator, vandermonde_generator)
+from repro.coding.spec import CodingSpec
+
+_LAZY = {
+    "select_redundancy": "repro.coding.planner",
+    "deployed_compute": "repro.coding.planner",
+    "CodedRuntime": "repro.coding.runtime",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)
+
+
+__all__ = [
+    "MDSCode", "CodingSpec", "arrival_shortfall_prob", "cauchy_generator",
+    "decode_matrix", "decode_outputs", "encode_outputs", "make_generator",
+    "vandermonde_generator", "select_redundancy", "deployed_compute",
+    "CodedRuntime",
+]

@@ -22,6 +22,17 @@ All arrays are defensively copied and frozen (read-only) at construction;
 "mutation" is :meth:`with_` / :meth:`drop_device`, which return new IRs.
 Legacy interop: :meth:`from_plan` / :meth:`to_plan` round-trip the object
 graph, :meth:`to_arrays` derives the Monte-Carlo ``PlanArrays`` view.
+
+Redundancy is per-group: by default every slot replicates its student
+across its members (the paper's scheme). An optional ``coding`` field
+(:class:`repro.coding.spec.CodingSpec`) switches chosen groups to
+erasure-coded mode — ``redundancy_modes()`` reports ``"replicate"`` or
+``"coded(n,k)"`` per slot — where a coded group's ``k`` slots plus
+``n - k`` parity shares form a systematic MDS code: the slot's portion is
+recoverable while its own share OR any ``k`` of the group's ``n`` shares
+arrive. Latency (k-th order statistic of share arrivals), quorum, the
+Eq. 1f outage analogue (a Poisson-binomial shortfall), the Fig. 4 profile
+and the Monte-Carlo view all account for parity shares.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.coding.spec import CodingSpec
 from repro.core.assignment import StudentArch
 from repro.core.grouping import Device
 
@@ -77,6 +89,10 @@ class PlanIR:
     A: np.ndarray                        # (M, M) activation graph
     d_th: float
     p_th: float
+    # per-group redundancy layout: None = pure replication (the default);
+    # a CodingSpec marks chosen groups as erasure-coded and places their
+    # parity shares (see repro.coding)
+    coding: Optional[CodingSpec] = None
 
     def __post_init__(self):
         N, S = len(self.device_names), len(self.student_names)
@@ -121,15 +137,47 @@ class PlanIR:
 
     # -- objective / constraints (Eq. 1a, 1f, 1g) ----------------------------
 
+    def _member_latency(self, member: np.ndarray, students: np.ndarray,
+                        alive: Optional[np.ndarray]) -> np.ndarray:
+        """Min Eq. 1a latency over each row's (live) placements; ∞ for
+        student-less or (live-)empty rows."""
+        if not self.N:
+            return np.full(len(students), np.inf)
+        lat = np.where(students[:, None] >= 0,
+                       self.latency_nd[np.maximum(students, 0)], np.inf)
+        m = member if alive is None else member & alive[None, :]
+        return np.where(m, lat, np.inf).min(axis=1)
+
+    def share_latencies(self, alive: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+        """(K + P,) per-share arrival latency: shares 0..K-1 are the slots'
+        systematic shares, the rest the coding spec's parity shares."""
+        base = self._member_latency(self.member, self.student_of, alive)
+        cs = self.coding
+        if cs is None or not cs.P:
+            return base
+        par = self._member_latency(cs.parity_member, cs.parity_student, alive)
+        return np.concatenate([base, par])
+
     def group_latency(self, alive: Optional[np.ndarray] = None) -> np.ndarray:
         """(K,) Eq. 1a inner: min over (live) members of the slot student's
-        latency; ∞ for student-less or (live-)empty slots."""
-        stu = self.student_of
-        lat = np.where(stu[:, None] >= 0,
-                       self.latency_nd[np.maximum(stu, 0)], np.inf)
-        m = self.member if alive is None else self.member & alive[None, :]
-        return np.where(m, lat, np.inf).min(axis=1) if self.N else \
-            np.full(self.K, np.inf)
+        latency; ∞ for student-less or (live-)empty slots. A coded slot is
+        additionally served once its group can decode — the k-th smallest
+        (live) share arrival — so parity can mask a dead systematic share
+        (or a merely SLOW one: the coded objective is never worse than the
+        replicated one, and can beat it)."""
+        cs = self.coding
+        if cs is None or not cs.n_groups:
+            return self._member_latency(self.member, self.student_of, alive)
+        share = self.share_latencies(alive)
+        base = share[:self.K]
+        out = np.array(base)
+        for c in range(cs.n_groups):
+            _, k = cs.code_nk(c)
+            slots = cs.group_slots(c)
+            rec = np.sort(share[cs.group_shares(c)])[k - 1]
+            out[slots] = np.minimum(base[slots], rec)
+        return out
 
     def objective(self, alive: Optional[np.ndarray] = None) -> float:
         """Eq. 1a outer: blocked by the slowest slot (∞ if any slot serves
@@ -143,14 +191,44 @@ class PlanIR:
         return self.objective()
 
     def group_outage(self, alive: Optional[np.ndarray] = None) -> np.ndarray:
-        """(K,) Eq. 1f: Π p_out over (live) members; 1.0 for empty slots."""
+        """(K,) Eq. 1f: Π p_out over (live) members; 1.0 for empty slots.
+        For a coded slot the analogue is the exact Poisson-binomial
+        shortfall: P(own share misses AND fewer than k of the group's other
+        shares arrive)."""
         m = self.member if alive is None else self.member & alive[None, :]
-        return np.where(m, self.device_caps[None, :, 3], 1.0).prod(axis=1)
+        p_out = self.device_caps[None, :, 3]
+        out = np.where(m, p_out, 1.0).prod(axis=1)
+        cs = self.coding
+        if cs is None or not cs.n_groups:
+            return out
+        pm = cs.parity_member if alive is None else \
+            cs.parity_member & alive[None, :]
+        par_out = np.where(pm, p_out, 1.0).prod(axis=1) if cs.P else \
+            np.zeros(0)
+        arrive = 1.0 - np.concatenate([out, par_out])
+        for k in np.flatnonzero(cs.group_of >= 0):
+            out[k] = cs.slot_shortfall(int(k), arrive)
+        return out
 
     def quorum(self, alive: Optional[np.ndarray] = None) -> np.ndarray:
-        """(K,) bool — slot has at least one (live) member."""
+        """(K,) bool — the slot's portion is obtainable: at least one (live)
+        member, or — for a coded slot — at least k of its group's n shares
+        still placeable on (live) devices."""
         m = self.member if alive is None else self.member & alive[None, :]
-        return m.any(axis=1)
+        ok = m.any(axis=1)
+        cs = self.coding
+        if cs is None or not cs.n_groups:
+            return ok
+        pm = cs.parity_member if alive is None else \
+            cs.parity_member & alive[None, :]
+        share_live = np.concatenate([ok, pm.any(axis=1) if cs.P
+                                     else np.zeros(0, bool)])
+        out = np.array(ok)
+        for c in range(cs.n_groups):
+            _, k = cs.code_nk(c)
+            if int(share_live[cs.group_shares(c)].sum()) >= k:
+                out[cs.group_slots(c)] = True
+        return out
 
     @property
     def feasible(self) -> bool:
@@ -160,10 +238,35 @@ class PlanIR:
                     and (self.group_outage() <= self.p_th).all())
 
     def total_params(self) -> float:
-        """S-Total: all student replicas (Fig. 4)."""
+        """S-Total: all student replicas, plus parity-share networks (Fig. 4)."""
         has = self.student_of >= 0
         params = self.student_caps[np.maximum(self.student_of, 0), 1]
-        return float((params * self.member.sum(axis=1) * has).sum())
+        total = float((params * self.member.sum(axis=1) * has).sum())
+        cs = self.coding
+        if cs is not None and cs.P:
+            pp = self.student_caps[np.maximum(cs.parity_student, 0), 1]
+            total += float((pp * cs.parity_member.sum(axis=1)).sum())
+        return total
+
+    def deployed_compute(self) -> float:
+        """Aggregate deployed compute (shares × portion FLOPs): every
+        placed replica or parity share costs its student's forward FLOPs —
+        the redundancy-efficiency axis ``benchmarks/bench_coding.py``
+        sweeps (replicate-K pays group-size×, coded-(n,k) pays n/k×)."""
+        has = self.student_of >= 0
+        fl = self.student_caps[np.maximum(self.student_of, 0), 0]
+        total = float((fl * self.member.sum(axis=1) * has).sum())
+        cs = self.coding
+        if cs is not None and cs.P:
+            pf = self.student_caps[np.maximum(cs.parity_student, 0), 0]
+            total += float((pf * cs.parity_member.sum(axis=1)).sum())
+        return total
+
+    def redundancy_modes(self) -> Tuple[str, ...]:
+        """Per-slot redundancy mode: ``"replicate"`` or ``"coded(n,k)"``."""
+        if self.coding is None:
+            return ("replicate",) * self.K
+        return self.coding.modes()
 
     def valid_params(self) -> float:
         """S-Valid: one replica per partition (Fig. 4)."""
@@ -193,6 +296,8 @@ class PlanIR:
             "group_sizes": self.member.sum(axis=1).tolist(),
             "students": [self.student_names[s] if ok else None
                          for s, ok in zip(self.student_of, has)],
+            "modes": list(self.redundancy_modes()),
+            "deployed_compute": self.deployed_compute(),
         }
 
     def validate(self) -> "PlanIR":
@@ -206,6 +311,10 @@ class PlanIR:
             raise ValueError("partitions do not cover all filters")
         if (self.student_of >= self.S).any():
             raise ValueError("student index out of range")
+        if self.coding is not None:
+            self.coding.validate(self.member)
+            if self.coding.P and (self.coding.parity_student >= self.S).any():
+                raise ValueError("parity-share student index out of range")
         return self
 
     # -- functional updates --------------------------------------------------
@@ -215,15 +324,20 @@ class PlanIR:
         return dataclasses.replace(self, **changes)
 
     def drop_device(self, name: str) -> "PlanIR":
-        """Permanent loss: remove the device column everywhere."""
+        """Permanent loss: remove the device column everywhere (parity
+        placements included)."""
         if name not in self.device_names:
             return self
         keep = np.array([n != name for n in self.device_names], bool)
+        coding = self.coding
+        if coding is not None and coding.P:
+            coding = coding.drop_device(int(np.flatnonzero(~keep)[0]))
         return self.with_(
             device_names=tuple(n for n in self.device_names if n != name),
             device_caps=self.device_caps[keep],
             member=self.member[:, keep],
             latency_nd=self.latency_nd[:, keep],
+            coding=coding,
         )
 
     # -- reconstruction of the object views ----------------------------------
@@ -282,7 +396,9 @@ class PlanIR:
                 students: Optional[Sequence[StudentArch]] = None):
         """Rebuild the legacy object graph (slot k → partition_idx k).
         `devices`/`students` supply the original objects (matched by name);
-        otherwise equal-valued objects are reconstructed from the arrays."""
+        otherwise equal-valued objects are reconstructed from the arrays.
+        The object graph predates the coding subsystem, so an attached
+        ``coding`` spec does not survive the round trip."""
         from repro.core import planner as PL
         dev_by_name = {d.name: d for d in (devices or ())}
         stu_by_name = {s.name: s for s in (students or ())}
@@ -305,20 +421,47 @@ class PlanIR:
     def to_arrays(self):
         """Derive the Monte-Carlo ``PlanArrays`` view (flattened replica
         devices; student-less slots keep their slot but contribute no
-        columns — same contract as the legacy ``simulator.plan_arrays``)."""
-        from repro.core.simulator import PlanArrays
+        columns — same contract as the legacy ``simulator.plan_arrays``).
+        Coded plans append one column per parity-share placement (marked
+        ``slot = -1``) and attach the :class:`~repro.core.simulator
+        .ShareLayout` that lets ``reduce_trials`` score ≥k-of-n recovery."""
+        from repro.core.simulator import PlanArrays, ShareLayout
         t, slot, p_out, names = [], [], [], []
+        cs = self.coding if (self.coding is not None
+                             and self.coding.n_groups) else None
+        R = self.K + (cs.P if cs is not None else 0)
+        share_cols: list = [[] for _ in range(R)]
         for k in range(self.K):
             s = int(self.student_of[k])
             if s < 0:
                 continue
             for n in np.flatnonzero(self.member[k]):
+                share_cols[k].append(len(t))
                 t.append(float(self.latency_nd[s, n]))
                 slot.append(k)
                 p_out.append(float(self.device_caps[n, 3]))
                 names.append(self.device_names[n])
+        layout = None
+        if cs is not None:
+            for p in range(cs.P):
+                s = int(cs.parity_student[p])
+                for n in np.flatnonzero(cs.parity_member[p]):
+                    share_cols[self.K + p].append(len(t))
+                    t.append(float(self.latency_nd[s, n]))
+                    slot.append(-1)
+                    p_out.append(float(self.device_caps[n, 3]))
+                    names.append(self.device_names[n])
+            layout = ShareLayout(
+                share_cols=tuple(np.asarray(c, np.int64)
+                                 for c in share_cols),
+                group_shares=tuple(cs.group_shares(c)
+                                   for c in range(cs.n_groups)),
+                group_slots=tuple(cs.group_slots(c)
+                                  for c in range(cs.n_groups)),
+                group_k=np.asarray([cs.code_nk(c)[1]
+                                    for c in range(cs.n_groups)], np.int64))
         slot_arr = np.asarray(slot, np.int64)
         cols = tuple(np.flatnonzero(slot_arr == k) for k in range(self.K))
         return PlanArrays(np.asarray(t, np.float64), slot_arr,
                           np.asarray(p_out, np.float64), tuple(names),
-                          self.K, cols)
+                          self.K, cols, layout=layout)

@@ -26,6 +26,12 @@ legacy RNG-draw count is shape-deterministic — see
 Richer failure scenarios (correlated domains, straggler deadlines, Markov
 link flapping) live in :mod:`repro.core.scenarios`; anything exposing
 ``sample(rng, arrays, trials)`` plugs into :func:`simulate`.
+
+Erasure-coded plans (a PlanIR carrying a :class:`repro.coding.spec
+.CodingSpec`) flow through the same engine: ``to_arrays`` appends parity
+-share columns and a :class:`ShareLayout`, the failure models sample those
+columns like any replica, and :func:`reduce_trials` scores coded recovery —
+a coded group completes iff ≥ k of its n shares arrive.
 """
 from __future__ import annotations
 
@@ -59,12 +65,31 @@ class TrialResult:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class ShareLayout:
+    """Erasure-coded share structure of a coded plan's replica columns
+    (built by :meth:`repro.core.plan_ir.PlanIR.to_arrays`). Share ids:
+    share ``s < K`` is slot ``s``'s systematic share, the rest are parity.
+    A coded group decodes — covering ALL its slots — once any ``k`` of its
+    ``n`` shares arrive; a systematic share alone covers its own slot."""
+    share_cols: Tuple[np.ndarray, ...]    # per-share replica column indices
+    group_shares: Tuple[np.ndarray, ...]  # per-group share ids (sys first)
+    group_slots: Tuple[np.ndarray, ...]   # per-group member slot ids
+    group_k: np.ndarray                   # (C,) data shares per group
+
+    @property
+    def n_shares(self) -> int:
+        return len(self.share_cols)
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanArrays:
     """Flattened replica-device view of a plan: one column per device of a
     group that actually holds a student. Student-less groups keep their slot
-    (they can never arrive) but contribute no columns."""
+    (they can never arrive) but contribute no columns. Coded plans carry
+    extra parity-share columns (``slot == -1``) plus the :class:`ShareLayout`
+    describing which shares decode which slots."""
     t: np.ndarray                    # (D,) Eq. 1a latency per replica device
-    slot: np.ndarray                 # (D,) partition slot of each device
+    slot: np.ndarray                 # (D,) partition slot (-1 = parity share)
     p_out: np.ndarray                # (D,) transmission outage probability
     names: Tuple[str, ...]           # (D,) device names, plan order
     n_slots: int                     # plan.K (incl. student-less slots)
@@ -73,10 +98,13 @@ class PlanArrays:
     # emitted slot-by-slot (both constructors do); None → ragged layout.
     # Precomputed because the serving hot path reduces once per micro-batch
     slot_starts: Optional[np.ndarray] = None
+    layout: Optional[ShareLayout] = None   # coded plans only
 
     def __post_init__(self):
         if self.slot_starts is not None or self.n_slots == 0:
             return
+        if self.layout is not None:
+            return                   # coded plans reduce share-wise
         lens = np.fromiter((len(c) for c in self.slot_cols), np.int64,
                            self.n_slots)
         if (lens.all() and int(lens.sum()) == len(self.slot)
@@ -116,7 +144,15 @@ def reduce_trials(arrays: PlanArrays, alive: np.ndarray,
 
     alive: (T, D) bool; delay: optional (T, D) additive straggler latency.
     Returns (lat (T, K) per-slot arrival time, arrived (T, K) bool,
-    latency (T,) quorum completion time, ∞ when nothing arrives)."""
+    latency (T,) quorum completion time, ∞ when nothing arrives).
+
+    Coded plans (``arrays.layout`` set) score erasure recovery instead of
+    plain replication: a coded group's slots all complete once ≥ k of its
+    n shares arrive (see :func:`reduce_trials_coded`)."""
+    if arrays.layout is not None:
+        lat, arrived, latency, _ = reduce_trials_coded(arrays, alive, delay,
+                                                       deadline)
+        return lat, arrived, latency
     eff = arrays.t[None, :] if delay is None else arrays.t[None, :] + delay
     eff = np.where(alive, eff, np.inf)
     if deadline is not None and np.isfinite(deadline):
@@ -139,6 +175,47 @@ def reduce_trials(arrays: PlanArrays, alive: np.ndarray,
     latency = np.where(arrived.any(axis=1),
                        np.where(arrived, lat, -np.inf).max(axis=1), np.inf)
     return lat, arrived, latency
+
+
+def reduce_trials_coded(arrays: PlanArrays, alive: np.ndarray,
+                        delay: Optional[np.ndarray] = None,
+                        deadline: Optional[float] = None
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+    """Coded-recovery reduction over a coded plan's aliveness matrix.
+
+    Per-share arrival time = min over the share's replica columns; a coded
+    group decodes at the k-th smallest of its n share times (∞ while fewer
+    than k arrive — complete iff ≥ k of n shares arrive), covering every
+    member slot; a slot's own systematic share also covers it alone (the
+    code is systematic). Replicate slots reduce exactly as before.
+
+    Returns ``(lat (T, K), arrived (T, K), latency (T,),
+    share_arrived (T, R))`` — the extra share-level mask is what the
+    serving path feeds the decode-weight builder."""
+    L = arrays.layout
+    if L is None:
+        raise ValueError("reduce_trials_coded needs a coded PlanArrays "
+                         "(layout attached by PlanIR.to_arrays)")
+    eff = arrays.t[None, :] if delay is None else arrays.t[None, :] + delay
+    eff = np.where(alive, eff, np.inf)
+    if deadline is not None and np.isfinite(deadline):
+        eff = np.where(eff <= deadline, eff, np.inf)
+    T = alive.shape[0]
+    share_t = np.full((T, L.n_shares), np.inf)
+    for s, cols in enumerate(L.share_cols):
+        if len(cols):
+            share_t[:, s] = eff[:, cols].min(axis=1)
+    lat = share_t[:, :arrays.n_slots].copy()
+    for c in range(len(L.group_shares)):
+        k = int(L.group_k[c])
+        rec = np.sort(share_t[:, L.group_shares[c]], axis=1)[:, k - 1]
+        slots = L.group_slots[c]
+        lat[:, slots] = np.minimum(lat[:, slots], rec[:, None])
+    arrived = np.isfinite(lat)
+    latency = np.where(arrived.any(axis=1),
+                       np.where(arrived, lat, -np.inf).max(axis=1), np.inf)
+    return lat, arrived, latency, np.isfinite(share_t)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,89 @@
+"""Fused coded-share decode: masked pseudo-inverse-weighted gather-matmul.
+
+After an erasure-coded dispatch the source holds the arrived-share tensor
+(B, R, F) — R = K systematic + P parity shares, rows of dead shares
+garbage — and a per-request decode operator ``dec`` (B, K, R) built host-side
+from the arrival pattern (identity rows for arrived systematic shares,
+pseudo-inverse rows of the MDS generator for erased ones, zeros for
+unrecoverable slots — see :func:`repro.coding.codes.decode_matrix`). The
+kernel fuses mask → (optional int8 share dequant) → per-request weighted
+gather over the share axis into one pass, so dead-share rows cost no HBM
+traffic re-reads and the recovered portion tensor never materializes an
+intermediate:
+
+    out (B, K, F)[b, k] = Σ_r  mask[b, r] · dec[b, k, r] · share[b, r] · s_r
+
+Grid (nb, K), both parallel: each program reduces the full (small) share
+axis for one (batch-tile, slot) pair on the VPU — R is a handful of shares,
+so the reduction is a short broadcast-multiply-accumulate, not a matmul.
+
+int8 transport mode: when ``shares`` is int8 (quantized share uplinks), pass
+per-share fp32 ``scales`` (R,) and the kernel dequantizes in-body — the fp32
+expansion of the share payload lives only in VMEM. The fp32 path multiplies
+by a scale of 1.0, which is bit-exact, so both paths share one kernel body.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
+
+
+def _decode_kernel(scale_ref, x_ref, d_ref, m_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                     # (bb, R, F)
+    s = scale_ref[...].astype(jnp.float32)                 # (R,)
+    # fold mask and dequant scale into the per-request decode weights: one
+    # (bb, R) weight row instead of touching the (bb, R, F) payload twice
+    w = d_ref[:, 0, :] * m_ref[...].astype(jnp.float32) * s[None, :]
+    o_ref[:, 0, :] = jnp.sum(x * w[:, :, None], axis=1)
+
+
+def coded_decode(shares: jnp.ndarray, dec: jnp.ndarray, mask: jnp.ndarray,
+                 scales: Optional[jnp.ndarray] = None, *,
+                 block_batch: int = 128, interpret: bool = False
+                 ) -> jnp.ndarray:
+    """shares: (B, R, F) fp32 or int8 arrived-share tensor; dec: (B, K, R)
+    fp32 per-request decode weights; mask: (B, R) share-arrival mask;
+    scales: optional (R,) fp32 per-share dequant scales (required when
+    ``shares`` is int8). Returns the recovered portions (B, K, F) fp32."""
+    B, R, F = shares.shape
+    K = dec.shape[1]
+    if shares.dtype == jnp.int8 and scales is None:
+        raise ValueError("int8 shares need per-share fp32 scales")
+    if scales is None:
+        scales = jnp.ones((R,), jnp.float32)
+    if B == 0:
+        return jnp.zeros((0, K, F), jnp.float32)
+    bb = min(block_batch, B)
+    pad = (-B) % bb
+    if pad:
+        shares = jnp.pad(shares, ((0, pad), (0, 0), (0, 0)))
+        dec = jnp.pad(dec, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    nb = shares.shape[0] // bb
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, K),
+        in_specs=[
+            pl.BlockSpec((bb, R, F), lambda i, k, *_: (i, 0, 0)),
+            pl.BlockSpec((bb, 1, R), lambda i, k, *_: (i, k, 0)),
+            pl.BlockSpec((bb, R), lambda i, k, *_: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1, F), lambda i, k, *_: (i, k, 0)),
+    )
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((shares.shape[0], K, F), jnp.float32),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(jnp.asarray(scales, jnp.float32), shares,
+      jnp.asarray(dec, jnp.float32), jnp.asarray(mask, jnp.int32))
+    return out[:B]

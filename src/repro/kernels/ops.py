@@ -12,6 +12,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import coded_decode as _cd
 from repro.kernels import decode_attention as _dec
 from repro.kernels import dequant_matmul as _dq
 from repro.kernels import flash_attention as _fa
@@ -72,6 +73,18 @@ def quorum_aggregate(portions, weights, bias, mask, scales=None, *,
     return _qa.quorum_aggregate(portions, weights, bias, mask, scales,
                                 block_batch=block_batch,
                                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def coded_decode(shares, dec, mask, scales=None, *, block_batch: int = 128,
+                 interpret: Optional[bool] = None):
+    """Fused masked decode of erasure-coded shares (coding subsystem).
+    shares: (B, R, F) arrived-share tensor (fp32 or int8 with per-share
+    ``scales``); dec: (B, K, R) per-request decode weights; mask: (B, R).
+    Returns the recovered portions (B, K, F)."""
+    return _cd.coded_decode(shares, dec, mask, scales,
+                            block_batch=block_batch,
+                            interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "block_n",

@@ -80,6 +80,15 @@ def quorum_aggregate_ref(portions, weights, bias, mask,
     return out + bias.astype(jnp.float32)
 
 
+def coded_decode_ref(shares, dec, mask, scales=None) -> jnp.ndarray:
+    """shares: (B, R, F) fp32 or int8; dec: (B, K, R); mask: (B, R);
+    scales: optional (R,) per-share dequant scales. Returns (B, K, F)."""
+    w = dec.astype(jnp.float32) * mask.astype(jnp.float32)[:, None, :]
+    if scales is not None:
+        w = w * scales.astype(jnp.float32)[None, None, :]
+    return jnp.einsum("bkr,brf->bkf", w, shares.astype(jnp.float32))
+
+
 def dequant_matmul_ref(x, q, scale) -> jnp.ndarray:
     """x: (B, D); q: (D, N) int8; scale: () or (N,) fp32."""
     w = q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)

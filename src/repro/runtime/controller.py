@@ -20,6 +20,12 @@ makes failure handling a first-class runtime loop over the canonical
   3. fall back to a full Algorithm-1 replan (:func:`planner.tune_d_th_ir` on
      the live fleet) when repair is infeasible, remapping distilled students
      one-to-one via :func:`failures.remap_students`,
+  3b. erasure-coded groups (a PlanIR carrying a coding spec) repair even
+     cheaper: a share whose every placement died is rebuilt by
+     *re-encoding* onto a live spare — one placement, no re-jit, no
+     re-distillation, because the share payload is a deterministic linear
+     combination of the group's portions (``reencoded_shares`` in the
+     outcome counts them),
   4. migrate an attached live :class:`~repro.runtime.serving.QuorumServer`
      in place — slots whose knowledge partition is untouched keep their
      jit-compiled portion forwards.
@@ -46,7 +52,7 @@ from repro.runtime.failures import remap_students
 @dataclasses.dataclass(frozen=True)
 class RepairOutcome:
     """One repair action taken (or proposed) by the controller."""
-    kind: str                         # "repair" | "full_replan" | "noop"
+    kind: str                  # "repair" | "full_replan" | "reencode" | "noop"
     ir: PlanIR                        # the plan after the action
     mapping: Dict[int, int]           # new slot -> old slot (student reuse)
     touched_slots: Tuple[int, ...]    # slots whose membership/student changed
@@ -56,6 +62,11 @@ class RepairOutcome:
     feasible: bool
     objective: float                  # live Eq. 1a objective after the action
     wall_s: float
+    # coded shares rebuilt by re-encoding (global share ids: slot id for
+    # systematic shares, K + p for parity share p) — a re-encoded share
+    # costs one donor placement and NO re-distillation: its payload is a
+    # deterministic linear combination of the group's portions
+    reencoded_shares: Tuple[int, ...] = ()
 
 
 class ClusterController:
@@ -122,7 +133,8 @@ class ClusterController:
 
     def observe(self, down_names: Sequence[str]) -> Optional[RepairOutcome]:
         """React to a new set of transiently-down devices. Returns the
-        applied outcome, or None when every slot still holds quorum."""
+        applied outcome, or None when every slot still holds quorum (for a
+        coded slot: its own share is live OR its group can still decode)."""
         down = set(down_names)
         if down == self.down:
             return None
@@ -134,34 +146,131 @@ class ClusterController:
 
     def permanent_loss(self, name: str) -> Optional[RepairOutcome]:
         """Remove a device from the fleet outright, then restore quorum.
-        Returns the applied outcome (a noop outcome when the loss broke no
-        group — the attached server still adopts the shrunken plan)."""
+        Coded shares the loss emptied are rebuilt FIRST by re-encoding onto
+        spare devices (placement-only — the share payload is a deterministic
+        linear combination, no re-distillation); replicate groups that lost
+        quorum then repair as before. Returns the applied outcome (a noop
+        outcome when the loss broke no group — the attached server still
+        adopts the shrunken plan)."""
         self.ir = self.ir.drop_device(name)
         self.down.discard(name)
         alive = self.ir.alive_mask(self.down)
+        self.ir, reenc, moved = self._reencode_shares(alive)
         if self.ir.quorum(alive).all():
             # quorum intact, but the loss may still have pushed a surviving
             # group past the Eq. 1f outage target — report that honestly
             feasible = bool(
                 (self.ir.group_outage(alive) <= self.ir.p_th).all())
             out = RepairOutcome(
-                kind="noop", ir=self.ir,
+                kind="reencode" if reenc else "noop", ir=self.ir,
                 mapping={k: k for k in range(self.ir.K)},
-                touched_slots=(), rejitted_slots=(), redeployed=0,
-                moved_devices=(), feasible=feasible,
-                objective=self.ir.objective(alive), wall_s=0.0)
+                touched_slots=tuple(s for s in reenc if s < self.ir.K),
+                rejitted_slots=(), redeployed=len(reenc),
+                moved_devices=moved, feasible=feasible,
+                objective=self.ir.objective(alive), wall_s=0.0,
+                reencoded_shares=reenc)
             self._apply(out)
             return out
-        return self._rebuild(alive)
+        return self._rebuild(alive, reencoded=reenc, moved=moved)
 
     # -- repair planning -----------------------------------------------------
 
-    def _rebuild(self, alive: np.ndarray) -> RepairOutcome:
+    def _rebuild(self, alive: np.ndarray, reencoded: Tuple[int, ...] = (),
+                 moved: Tuple[str, ...] = ()) -> RepairOutcome:
+        if not reencoded and self.ir.coding is not None:
+            self.ir, reencoded, moved = self._reencode_shares(alive)
+            if reencoded and self.ir.quorum(alive).all():
+                out = RepairOutcome(
+                    kind="reencode", ir=self.ir,
+                    mapping={k: k for k in range(self.ir.K)},
+                    touched_slots=tuple(s for s in reencoded
+                                        if s < self.ir.K),
+                    rejitted_slots=(), redeployed=len(reencoded),
+                    moved_devices=moved,
+                    feasible=bool((self.ir.group_outage(alive)
+                                   <= self.ir.p_th).all()),
+                    objective=self.ir.objective(alive), wall_s=0.0,
+                    reencoded_shares=reencoded)
+                self._apply(out)
+                return out
         out = None if self.force_full else self.plan_repair(alive)
         if out is None:
             out = self.plan_full(alive)
+        # a full replan discards the coding layout (and with it any share
+        # placement the re-encode pass made), so its outcome must not
+        # report that re-encode work as applied
+        if reencoded and out.kind != "full_replan":
+            out = dataclasses.replace(
+                out,
+                reencoded_shares=tuple(reencoded) + out.reencoded_shares,
+                moved_devices=tuple(moved) + tuple(out.moved_devices),
+                redeployed=out.redeployed + len(reencoded))
         self._apply(out)
         return out
+
+    def _reencode_shares(self, alive: np.ndarray
+                         ) -> Tuple[PlanIR, Tuple[int, ...],
+                                    Tuple[str, ...]]:
+        """Rebuild coded shares with no live placement by re-encoding onto
+        live spare devices (unassigned, Eq. 1g memory respected, picked by
+        Eq. 1a latency of the share's student). Returns the (possibly
+        unchanged) IR plus the rebuilt global share ids and donor names —
+        no portion forward is re-jitted and no student re-distilled: the
+        new device serves the same deterministic linear combination.
+
+        Re-encoding is a real data operation, not bookkeeping: a share can
+        only be recomputed from ≥ k live shares of its group, so a group
+        that has already lost decode (fewer than k shares live) is NOT
+        eligible — its slots fall through to student redeploys via
+        ``plan_repair`` / ``plan_full``."""
+        ir = self.ir
+        cs = ir.coding
+        if cs is None or not cs.n_groups or not ir.N:
+            return ir, (), ()
+        member = np.array(ir.member)
+        pmember = np.array(cs.parity_member)
+        used = member.any(axis=0)
+        if cs.P:
+            used = used | pmember.any(axis=0)
+        spares = [int(n) for n in np.flatnonzero(alive & ~used)]
+        params = ir.student_caps[:, 1]
+        c_mem = ir.device_caps[:, 1]
+        share_live = np.concatenate([
+            (member & alive[None, :]).any(axis=1),
+            (pmember & alive[None, :]).any(axis=1) if cs.P
+            else np.zeros(0, bool)])
+        lost: List[Tuple[int, int, np.ndarray, int]] = []
+        for c in range(cs.n_groups):
+            shares = cs.group_shares(c)
+            _, k = cs.code_nk(c)
+            if int(share_live[shares].sum()) < k:
+                continue            # undecodable: re-encoding has no source
+            for s in cs.group_slots(c):
+                if not share_live[s]:
+                    lost.append((int(s), int(ir.student_of[s]), member,
+                                 int(s)))
+            for p in cs.group_parities(c):
+                if not share_live[ir.K + int(p)]:
+                    lost.append((ir.K + int(p), int(cs.parity_student[p]),
+                                 pmember, int(p)))
+        reencoded: List[int] = []
+        moved: List[str] = []
+        for share_id, stu, mat, row in lost:
+            if stu < 0 or not spares:
+                continue
+            fits = [n for n in spares if params[stu] <= c_mem[n]]
+            if not fits:
+                continue
+            best = min(fits, key=lambda n: float(ir.latency_nd[stu, n]))
+            mat[row, best] = True
+            spares.remove(best)
+            reencoded.append(share_id)
+            moved.append(ir.device_names[best])
+        if not reencoded:
+            return ir, (), ()
+        new_ir = ir.with_(member=member,
+                          coding=cs.with_(parity_member=pmember))
+        return new_ir, tuple(reencoded), tuple(moved)
 
     def _apply(self, out: RepairOutcome) -> None:
         self.ir = out.ir
@@ -179,11 +288,20 @@ class ClusterController:
         ir = self.ir
         N = ir.N
         live = ir.member & alive[None, :]
-        broken = np.flatnonzero(~live.any(axis=1))
+        # quorum-aware: a coded slot whose group can still decode is NOT
+        # broken even with its own share down (identical to live.any(1)
+        # for replicate slots)
+        broken = np.flatnonzero(~ir.quorum(alive))
         if not len(broken) or not N:
             return None
+        # parity-share devices are busy too: they must not be treated as
+        # free donors (stealing one would silently kill the coded share it
+        # computes while quorum()/outage still scored it alive)
         assigned = ir.member.any(axis=0)
-        slot_of = np.where(assigned, ir.member.argmax(axis=0), -1)
+        if ir.coding is not None and ir.coding.P:
+            assigned = assigned | ir.coding.parity_member.any(axis=0)
+        slot_of = np.where(ir.member.any(axis=0),
+                           ir.member.argmax(axis=0), -1)
         live_counts = live.sum(axis=1)
         dev_idx = np.arange(N)
         in_slot_live = (slot_of >= 0) & live[np.maximum(slot_of, 0), dev_idx]
@@ -205,7 +323,7 @@ class ClusterController:
         # stays within p_th after the donation (removing a replica can only
         # raise the outage product, so any subset of this prefix is safe too)
         donors: List[int] = [int(n) for n in dev_idx
-                             if alive[n] and slot_of[n] < 0]
+                             if alive[n] and not assigned[n]]
         p_out_all = ir.device_caps[:, 3]
         min_cost = cost.min(axis=0)
         for k in range(ir.K):
@@ -333,9 +451,13 @@ class ClusterController:
         for k in range(small.K):
             for j in np.flatnonzero(small.member[k]):
                 member_full[k, col[small.device_names[j]]] = True
+        # a full replan reshapes groups and partitions wholesale, so any
+        # coded layout of the OLD plan is meaningless against the new slot
+        # axis — drop it (re-run select_redundancy on the result to re-code)
         new_ir = ir.with_(member=member_full, partition=small.partition,
                           student_of=small.student_of,
-                          group_idx=small.group_idx, d_th=small.d_th)
+                          group_idx=small.group_idx, d_th=small.d_th,
+                          coding=None)
         mapping = remap_students(ir, new_ir)
         rejit = tuple(
             k for k in range(new_ir.K)

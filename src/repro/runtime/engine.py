@@ -97,7 +97,8 @@ class EngineReport:
         if not done:
             return {"n": 0, "throughput": 0.0, "p50": float("inf"),
                     "p99": float("inf"), "slo_attainment": 0.0,
-                    "quorum_rate": 0.0, "mean_batch": 0.0,
+                    "quorum_rate": 0.0, "degraded_rate": 0.0,
+                    "mean_batch": 0.0,
                     "migrations": len(self.migrations)}
         t0 = min(r.t_arrival for r in done)
         t1 = max(r.t_done for r in done)
@@ -108,6 +109,10 @@ class EngineReport:
             "p99": float(np.percentile(lats, 99)),
             "slo_attainment": float(np.mean(lats <= self.slo)),
             "quorum_rate": float(np.mean([r.quorum_ok for r in done])),
+            # fraction of answers served with any zeroed portion (missed
+            # quorum or a migration knowledge gap) — the accuracy-risk dial
+            # ServeResult.coverage quantifies per request
+            "degraded_rate": float(np.mean([r.degraded for r in done])),
             "mean_batch": float(np.mean([b.n_requests for b in self.batches]))
             if self.batches else 0.0,
             "migrations": len(self.migrations),

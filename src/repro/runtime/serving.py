@@ -37,6 +37,20 @@ The legacy one-forward-per-partition loop stays behind ``fastpath=False``
 as the reference oracle: the fp32 fast path is bit-identical to it at
 fixed seeds (the merge is linear in each portion, and padding only appends
 exact-zero columns).
+
+Coded plans (a PlanIR carrying a :class:`repro.coding.spec.CodingSpec`)
+serve through the same two paths. While every systematic share arrives the
+flow is IDENTICAL to uncoded serving (the code is systematic — zero
+overhead, bit-exact). When a systematic share is erased but its group
+holds ≥ k of its n shares, the parity shares are emulated inside the
+compiled program (one einsum against the stacked generator parity rows —
+the central stand-in for the parity devices' coded networks, as in the
+paper's §V emulation), host-built pseudo-inverse decode weights recover
+the missing portions via the fused :func:`repro.kernels.coded_decode
+.coded_decode` kernel, and the result flows into the same quorum merge.
+The fused megastep folds forward → encode → decode → merge into ONE
+dispatch; the legacy loop runs the identical math through the jitted ops
+wrappers and remains the bit-identical oracle.
 """
 from __future__ import annotations
 
@@ -50,7 +64,9 @@ import numpy as np
 from repro.core.grouping import Device
 from repro.core.plan_ir import PlanIR
 from repro.core.planner import Plan
-from repro.core.simulator import FailureModel, plan_arrays, reduce_trials
+from repro.core.simulator import (FailureModel, plan_arrays, reduce_trials,
+                                  reduce_trials_coded)
+from repro.kernels import coded_decode as _cd
 from repro.kernels import ops as K
 from repro.kernels import quorum_aggregate as _qa
 from repro.optim.compression import (Int8Weights, dequantize_tree,
@@ -85,6 +101,14 @@ class ServeResult:
             self._np_logits = np.asarray(x)
             self._logits = None    # release the shared micro-batch buffer
         return self._np_logits
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of partitions recovered (arrived directly or decoded
+        from coded shares) — mirrors ``TrialResult.coverage``. 1.0 for a
+        complete answer; a degraded answer had ``1 - coverage`` of its
+        portions zeroed at the merge."""
+        return float(self.arrived.mean()) if len(self.arrived) else 0.0
 
     @property
     def failed_devices(self) -> List[str]:
@@ -182,6 +206,10 @@ class QuorumServer:
     _fused_stacked: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False)
     _fused_step: Optional[Callable] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _fused_step_coded: Optional[Callable] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _coded_rt: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False)
     _fc_q: Optional[Int8Weights] = dataclasses.field(
         default=None, init=False, repr=False)
@@ -292,7 +320,60 @@ class QuorumServer:
     def _invalidate_fused(self) -> None:
         self._fused_stacked = None
         self._fused_step = None
+        self._fused_step_coded = None
         self._fc_q = None
+
+    # -- coded-redundancy state ----------------------------------------------
+
+    def _coded_runtime(self, ir):
+        """The plan's coded-serving glue (encode matrix + memoized decode
+        weights), rebuilt whenever a migration installs a new IR; None for
+        replicate-only plans."""
+        spec = getattr(ir, "coding", None)
+        if spec is None or not spec.n_groups:
+            return None
+        rt = self._coded_rt
+        if rt is None or rt.ir is not ir:
+            from repro.coding.runtime import CodedRuntime
+            rt = CodedRuntime(ir)
+            self._coded_rt = rt
+        return rt
+
+    def _coded_step(self) -> Callable:
+        if self._fused_step_coded is None:
+            self._fused_step_coded = self._build_fused_step_coded()
+        return self._fused_step_coded
+
+    def _build_fused_step_coded(self) -> Callable:
+        """The coded twin of :meth:`_build_fused_step`: (optional int8
+        dequant →) vmapped portion forward → parity-share encode (one
+        einsum against the stacked generator parity rows) → fused masked
+        pseudo-inverse decode → quorum merge, all in ONE compiled program.
+        ``dec``/``share_mask`` arrive as the host-built numpy decode
+        weights and share-arrival mask; nothing crosses back to the host
+        between forward and merge."""
+        apply = self.fused.apply
+        pre = self.fused.pre
+        int8 = self.quantize == "int8"
+        interpret = jax.default_backend() != "tpu"
+
+        def step(stacked, x, dec, share_mask, any_mask, enc, fc_w,
+                 fc_scales, fc_b):
+            params = dequantize_tree(stacked) if int8 else stacked
+            if pre is not None:
+                x = pre(x)                   # shared trunk: once, not K times
+            portions = jax.vmap(apply, in_axes=(0, None))(params, x)
+            parity = jnp.einsum("pk,kbf->pbf", enc, portions)
+            shares = jnp.concatenate([portions, parity], axis=0)
+            decoded = _cd.coded_decode(jnp.transpose(shares, (1, 0, 2)),
+                                       dec, share_mask, interpret=interpret)
+            return _qa.quorum_aggregate(jnp.transpose(decoded, (1, 0, 2)),
+                                        fc_w, fc_b, any_mask, fc_scales,
+                                        interpret=interpret)
+
+        donate = (("dec", "share_mask", "any_mask")
+                  if jax.default_backend() != "cpu" else ())
+        return jax.jit(step, donate_argnames=donate)
 
     # -- serving -------------------------------------------------------------
 
@@ -327,8 +408,12 @@ class QuorumServer:
             return []
         # -- migration handoff snapshot (one read of every mutable field) ----
         fastpath = self.fastpath_active
+        rt = self._coded_runtime(self.ir)      # None for replicate-only plans
+        step_coded = None
         if fastpath:
             stacked, step = self._ensure_fused()
+            if rt is not None:
+                step_coded = self._coded_step()
             fc_q = self._fc_q
             jitted = None
         else:
@@ -366,30 +451,74 @@ class QuorumServer:
         # re-sampling and re-reducing per micro-batch (this path is the
         # failure-free hot loop; the generator is untouched either way, so
         # the cached rows are bit-identical to the computed ones)
+        share_arrived = None
         if (type(failure) is FailureModel and not failure.forced_failures
                 and failure.crash_prob == 0 and not failure.outages):
-            alive1, arrived1, lat1 = self._deterministic_outcome(
+            alive1, arrived1, lat1, share1 = self._deterministic_outcome(
                 arrays, deadline)
             alive = np.broadcast_to(alive1, (R, alive1.shape[0]))
             arrived = np.broadcast_to(arrived1, (R, arrived1.shape[0]))
             latency = np.broadcast_to(lat1, (R,))
+            if share1 is not None:
+                share_arrived = np.broadcast_to(share1, (R, share1.shape[0]))
         else:
             alive, delay = failure.sample(rng, arrays, R)
-            _, arrived, latency = reduce_trials(arrays, alive, delay,
-                                                deadline)
+            if rt is not None:
+                _, arrived, latency, share_arrived = reduce_trials_coded(
+                    arrays, alive, delay, deadline)
+            else:
+                _, arrived, latency = reduce_trials(arrays, alive, delay,
+                                                    deadline)
 
         # per-sample row mask: request r's rows of portion k are zeroed when
         # k missed r's quorum (linear merge ⇒ exact per-request masking).
         # The clean (all-arrived) batch skips building the (B, K) mask
         clean = bool(arrived.all())
-        row_arrived = None if clean else np.repeat(arrived, sizes, axis=0)
         any_arrived = arrived.any(axis=0)                   # (K,)
-
+        # coded recovery engages only when a CODED slot's systematic share
+        # is erased — while those all arrive the coded flow IS the plain
+        # flow (identity decode), so it is skipped entirely: failure-free
+        # coded serving — and any outage confined to replicate slots or
+        # parity shares — is bit-identical to (and as fast as) uncoded
+        decode_needed = (rt is not None and share_arrived is not None
+                         and not bool(
+                             share_arrived[:, rt.coded_slots].all()))
         if fastpath:
             if fc_q is not None:
                 fc_w, fc_scales = fc_q.q, fc_q.scale
             else:
                 fc_w, fc_scales = fc_weights, None
+        if decode_needed:
+            # host-built per-request decode operators (memoized pinv per
+            # arrival pattern), expanded to rows; everything else happens
+            # inside the compiled program
+            dec_rows = np.repeat(rt.decode_weights(share_arrived),
+                                 sizes, axis=0)              # (B, K, R_sh)
+            mask_rows = np.repeat(share_arrived, sizes, axis=0)
+            if fastpath:
+                logits = step_coded(stacked, x_all, dec_rows, mask_rows,
+                                    any_arrived, rt.enc_device, fc_w,
+                                    fc_scales, fc_bias)
+            else:
+                # the oracle loop: every portion is computed (the parity
+                # emulation combines them), then the SAME encode → decode →
+                # merge math runs through the jitted ops wrappers
+                x_dev = jnp.asarray(x_all)
+                stacked_p = jnp.stack([jitted[kslot](x_dev)
+                                       for kslot in range(Kp)])  # (K, B, Dk)
+                parity = jnp.einsum("pk,kbf->pbf", rt.enc_device, stacked_p)
+                shares = jnp.concatenate([stacked_p, parity], axis=0)
+                decoded = K.coded_decode(jnp.transpose(shares, (1, 0, 2)),
+                                         dec_rows, mask_rows)
+                logits = K.quorum_aggregate(
+                    jnp.transpose(decoded, (1, 0, 2)), fc_weights, fc_bias,
+                    jnp.asarray(any_arrived, jnp.int32))
+            return self._package(xs, R, sizes, offs, logits, arrived,
+                                 latency, alive, arrays,
+                                 knowledge_gap=knowledge_gap)
+        row_arrived = None if clean else np.repeat(arrived, sizes, axis=0)
+
+        if fastpath:
             # numpy operands cross the jit boundary directly (fast-path
             # device_put) — no eager conversions before the single dispatch
             logits = step(stacked, x_all, row_arrived, any_arrived,
@@ -410,9 +539,16 @@ class QuorumServer:
             logits = K.quorum_aggregate(
                 stacked_p, fc_weights, fc_bias,
                 jnp.asarray(any_arrived, jnp.int32))
+        return self._package(xs, R, sizes, offs, logits, arrived, latency,
+                             alive, arrays, knowledge_gap=knowledge_gap)
 
-        # one vectorized pass extracts every per-request scalar (the old
-        # per-request float()/all() calls were measurable at batch 32)
+    def _package(self, xs, R, sizes, offs, logits, arrived, latency, alive,
+                 arrays, *, knowledge_gap: Optional[bool] = None
+                 ) -> List[ServeResult]:
+        """One vectorized pass extracts every per-request scalar (the old
+        per-request float()/all() calls were measurable at batch 32)."""
+        if knowledge_gap is None:
+            knowledge_gap = bool(self.zeroed_slots)
         lat_list = latency.tolist()
         complete = arrived.all(axis=1).tolist()
         offs_list = offs.tolist()
@@ -429,18 +565,25 @@ class QuorumServer:
         ) for r in range(R)]
 
     def _deterministic_outcome(self, arrays, deadline: float):
-        """One cached (alive row, arrived row, latency) for the
+        """One cached (alive row, arrived row, latency, share row) for the
         deterministic failure-free model. Keyed by the PlanArrays object —
-        migrations install a fresh object, so stale plans can't hit."""
+        migrations install a fresh object, so stale plans can't hit. The
+        share row is None for replicate-only plans."""
         key = (id(arrays), deadline)
         hit = self._det_cache.get(key)
         if hit is None or hit[0] is not arrays:
             alive = np.ones((1, len(arrays.names)), bool)
-            _, arrived, latency = reduce_trials(arrays, alive, None,
-                                                deadline)
-            hit = (arrays, alive[0], arrived[0], latency)
+            if arrays.layout is not None:
+                _, arrived, latency, share = reduce_trials_coded(
+                    arrays, alive, None, deadline)
+                share_row = share[0]
+            else:
+                _, arrived, latency = reduce_trials(arrays, alive, None,
+                                                    deadline)
+                share_row = None
+            hit = (arrays, alive[0], arrived[0], latency, share_row)
             self._det_cache[key] = hit
-        return hit[1], hit[2], hit[3]
+        return hit[1], hit[2], hit[3], hit[4]
 
     # -- elastic re-planning -------------------------------------------------
 
@@ -597,6 +740,7 @@ class QuorumServer:
         self._fc_q = None                       # re-quantized lazily
         if new_fused is None:
             self._fused_step = None
+            self._fused_step_coded = None
         self.last_migration = {"rejitted_slots": tuple(rejit),
                                "reused_slots": K_new - len(rejit) - len(zeroed),
                                "refit_slots": tuple(refit),
@@ -726,7 +870,11 @@ class QuorumServer:
     def live_devices(self) -> List[Device]:
         if isinstance(self.plan, PlanIR):
             devs = self.plan.devices()
-            return [devs[n] for n in np.flatnonzero(self.plan.member.any(0))]
+            used = self.plan.member.any(0)
+            cs = self.plan.coding
+            if cs is not None and cs.P:
+                used = used | cs.parity_member.any(0)
+            return [devs[n] for n in np.flatnonzero(used)]
         return [d for g in self.plan.groups for d in g.devices]
 
 
