@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Check that local markdown links resolve.
+
+Scans the given markdown files (or the repo's default doc set) for inline
+``[text](target)`` links, and verifies every non-external target exists on
+disk relative to the linking file. ``#fragment`` anchors are checked
+against the target file's headings. External links (http/https/mailto) are
+skipped — CI must not depend on the network.
+
+Usage:  python scripts/check_md_links.py [FILE.md ...]
+Exit:   0 when every link resolves, 1 otherwise (failures on stderr).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT = ["README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md", "docs"]
+
+# inline links, skipping images; code spans are stripped first
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE_RE = re.compile(r"`[^`]*`|```.*?```", re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _anchors(md: Path) -> set:
+    """GitHub-style anchor slugs for every heading in ``md``."""
+    out = set()
+    for line in md.read_text(encoding="utf-8").splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            slug = re.sub(r"[^\w\s-]", "", m.group(1).lower())
+            out.add(re.sub(r"\s+", "-", slug.strip()))
+    return out
+
+
+def check_file(md: Path) -> list:
+    text = CODE_RE.sub("", md.read_text(encoding="utf-8"))
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, fragment = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+            continue
+        if fragment and dest.suffix == ".md" and \
+                fragment.lower() not in _anchors(dest):
+            errors.append(f"{md.relative_to(REPO)}: missing anchor "
+                          f"-> {target}")
+    return errors
+
+
+def main(argv: list) -> int:
+    roots = [Path(a) for a in argv] or [REPO / p for p in DEFAULT]
+    files = []
+    for r in roots:
+        if r.is_dir():
+            files.extend(sorted(r.rglob("*.md")))
+        elif r.exists():
+            files.append(r)
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

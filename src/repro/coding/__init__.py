@@ -5,8 +5,12 @@ Layers:
     numpy reference, Poisson-binomial reliability DP;
   - :mod:`repro.coding.spec`    — :class:`CodingSpec`, the array-backed
     per-plan coding layout a :class:`~repro.core.plan_ir.PlanIR` carries;
+  - :mod:`repro.coding.compute` — :class:`ComputeCodingSpec` /
+    :class:`ComputeRuntime`, intermediate-COMPUTATION coding: a slot's
+    matmul is split into k weight shards + parity shards and served from
+    the first k arrivals (vs :mod:`spec`'s coding over slot outputs);
   - :mod:`repro.coding.planner` — ``select_redundancy``, the mode-selection
-    pass picking replication vs coding per group;
+    pass picking replication vs output-coding vs compute-coding per group;
   - :mod:`repro.coding.runtime` — ``CodedRuntime``, the serving-side encode
     matrix + memoized per-arrival-pattern decode weights.
 
@@ -18,6 +22,9 @@ from repro.coding.codes import (MDSCode, arrival_shortfall_prob,
                                 cauchy_generator, decode_matrix,
                                 decode_outputs, encode_outputs,
                                 make_generator, vandermonde_generator)
+from repro.coding.compute import (ComputeCodingSpec, ComputeRuntime,
+                                  reconstruct_from_shards,
+                                  shard_linear_weights)
 from repro.coding.spec import CodingSpec
 
 _LAZY = {
@@ -36,8 +43,10 @@ def __getattr__(name: str):
 
 
 __all__ = [
-    "MDSCode", "CodingSpec", "arrival_shortfall_prob", "cauchy_generator",
-    "decode_matrix", "decode_outputs", "encode_outputs", "make_generator",
+    "MDSCode", "CodingSpec", "ComputeCodingSpec", "ComputeRuntime",
+    "arrival_shortfall_prob", "cauchy_generator", "decode_matrix",
+    "decode_outputs", "encode_outputs", "make_generator",
+    "reconstruct_from_shards", "shard_linear_weights",
     "vandermonde_generator", "select_redundancy", "deployed_compute",
     "CodedRuntime",
 ]

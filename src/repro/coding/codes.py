@@ -117,16 +117,20 @@ class MDSCode:
 
     @property
     def G(self) -> np.ndarray:
+        """The (n, k) systematic generator matrix (identity prefix)."""
         return make_generator(self.n, self.k, self.construction)
 
     @property
     def r(self) -> int:
+        """Number of parity shares, ``n - k``."""
         return self.n - self.k
 
     def encode(self, data: np.ndarray) -> np.ndarray:
+        """Encode stacked data (k, B, F) into shares (n, B, F)."""
         return encode_outputs(self.G, data)
 
     def decode(self, shares: np.ndarray, arrived: np.ndarray) -> np.ndarray:
+        """Recover the data (k, B, F) from any k arrived shares."""
         return decode_outputs(self.G, shares, arrived)
 
 

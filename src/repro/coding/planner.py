@@ -33,6 +33,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.coding.codes import arrival_shortfall_prob
+from repro.coding.compute import ComputeCodingSpec
 from repro.coding.spec import CodingSpec
 from repro.core.plan_ir import PlanIR
 
@@ -51,7 +52,8 @@ def select_redundancy(ir: PlanIR, *, code_k: int = 4,
                       parity: Optional[int] = None,
                       max_parity: int = 3,
                       min_group: int = 2,
-                      construction: str = "vandermonde") -> PlanIR:
+                      construction: str = "vandermonde",
+                      mode: str = "output") -> PlanIR:
     """Mode-selection pass: convert replicated groups to coded-(n, k) where
     coding meets the replicated survivability target at lower deployed
     compute. Returns a new :class:`PlanIR` (possibly the input unchanged
@@ -60,16 +62,31 @@ def select_redundancy(ir: PlanIR, *, code_k: int = 4,
 
     Parameters
     ----------
-    code_k:    max partitions per coded group (k).
+    code_k:    max partitions per coded group (k), or — in ``"compute"``
+               mode — the number of data shards each slot's matmul splits
+               into.
     parity:    fixed parity-share count per group; ``None`` sizes ``r``
                adaptively (1..max_parity) until the group's decode
                shortfall is ≤ the probability that any of the absorbed
                replicated groups fails.
     min_group: smallest slot pool worth coding (k = 1 degenerates to
                replication).
+    mode:      ``"output"`` (default) pools slots into output-coded groups
+               with parity devices running whole extra portions
+               (:class:`CodingSpec`); ``"compute"`` codes each slot's OWN
+               computation — its matmul splits into ``code_k`` shards plus
+               ``r`` pre-encoded parity shards, one per member device, and
+               the slot completes on the first ``code_k`` shard arrivals
+               (:class:`~repro.coding.compute.ComputeCodingSpec`).
     """
-    if ir.coding is not None:
+    if ir.coding is not None or ir.compute_coding is not None:
         raise ValueError("plan already carries a coding spec")
+    if mode == "compute":
+        return _select_compute(ir, code_k=code_k, parity=parity,
+                               max_parity=max_parity,
+                               construction=construction)
+    if mode != "output":
+        raise ValueError(f"unknown redundancy mode {mode!r}")
     K, N = ir.K, ir.N
     if K == 0 or N == 0:
         return ir
@@ -198,3 +215,101 @@ def select_redundancy(ir: PlanIR, *, code_k: int = 4,
         construction=construction,
     )
     return ir.with_(member=member, coding=spec).validate()
+
+
+def _select_compute(ir: PlanIR, *, code_k: int,
+                    parity: Optional[int],
+                    max_parity: int,
+                    construction: str) -> PlanIR:
+    """``mode="compute"`` body: per-slot intermediate-computation coding.
+
+    Each slot is treated independently on the Eq. 1a matrix: its candidate
+    devices (current replicas plus the unassigned spare pool) are ranked by
+    SHARD latency ``latency_nd[stu, c] / k`` (both Eq. 1a terms scale by
+    the 1/k output split), the ``k`` fastest fitting devices take the
+    systematic shards — so the all-alive first-k arrival set is exactly
+    the systematic set and serving passes portions through undecoded —
+    and ``r`` more take pre-encoded parity shards. Eq. 1g admits a device
+    when ``params[stu] / k`` fits its memory (a shard holds 1/k of the
+    weights). Adaptive sizing (``parity=None``) grows ``r`` until the
+    coded Eq. 1f shortfall P(< k shards arrive) is within the slot's own
+    replicated outage (never past ``p_th`` when the baseline met it) and
+    additionally requires the coded deployment to be cheaper (``n/k <``
+    replica count) and no slower all-alive than replication. Slots are
+    visited slowest-first so stragglers get first pick of the spares;
+    replicas a coded slot frees rejoin the pool for later slots.
+    """
+    K, N = ir.K, ir.N
+    if K == 0 or N == 0:
+        return ir
+    stu = ir.student_of
+    if (stu < 0).any():
+        return ir                               # student-less slots: bail out
+    k = int(code_k)
+    if k < 2:
+        return ir                               # k = 1 degenerates to replication
+    lat = ir.latency_nd[stu]                    # (K, N) slot-student latency
+    member = np.array(ir.member)
+    p_out = ir.device_caps[:, 3]
+    c_mem = ir.device_caps[:, 1]
+    params = ir.student_caps[:, 1]
+    used = member.any(axis=0)
+    pool = set(int(n) for n in range(N) if not used[n])
+    order = np.argsort(-ir.group_latency(), kind="stable")
+
+    chosen_slots: List[int] = []
+    chosen_mems: List[np.ndarray] = []
+    for s in (int(x) for x in order):
+        own = [int(c) for c in np.flatnonzero(member[s])]
+        if not own:
+            continue
+        cands = sorted(set(own) | pool, key=lambda c: (float(lat[s, c]), c))
+        fits = [c for c in cands if params[stu[s]] / k <= c_mem[c]]
+        if len(fits) <= k:
+            continue                            # no room for any parity shard
+        rep_out = float(np.prod(p_out[np.asarray(own, np.int64)]))
+        baseline = max(ir.p_th, rep_out)
+        chosen: List[int] = []
+        ok = False
+        if parity is not None:
+            if len(fits) >= k + parity:
+                chosen = fits[:k + parity]
+                sf = arrival_shortfall_prob(
+                    1.0 - p_out[np.asarray(chosen, np.int64)], k)
+                ok = sf <= baseline + 1e-12
+        else:
+            for r in range(1, max_parity + 1):
+                if len(fits) < k + r:
+                    break
+                cand = fits[:k + r]
+                sf = arrival_shortfall_prob(
+                    1.0 - p_out[np.asarray(cand, np.int64)], k)
+                if sf <= baseline + 1e-12:
+                    chosen, ok = cand, True
+                    break
+            if ok:
+                n = len(chosen)
+                rep_lat = min(float(lat[s, c]) for c in own)
+                if n / k >= len(own):           # must be cheaper than replication
+                    ok = False
+                elif float(lat[s, chosen[k - 1]]) / k > rep_lat + 1e-12:
+                    ok = False                  # and no slower all-alive
+        if not ok or not chosen:
+            continue
+        freed = set(own) - set(chosen)
+        pool = (pool - set(chosen)) | freed
+        member[s] = False
+        member[s, np.asarray(chosen, np.int64)] = True
+        chosen_slots.append(s)
+        chosen_mems.append(np.asarray(chosen, np.int64))
+
+    if not chosen_slots:
+        return ir
+    order2 = np.argsort(chosen_slots)
+    spec = ComputeCodingSpec(
+        slots=np.asarray([chosen_slots[i] for i in order2], np.int64),
+        k=np.full(len(chosen_slots), k, np.int64),
+        shard_member=tuple(chosen_mems[i] for i in order2),
+        construction=construction,
+    )
+    return ir.with_(member=member, compute_coding=spec).validate()

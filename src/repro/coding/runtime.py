@@ -30,6 +30,9 @@ from repro.core.plan_ir import PlanIR
 
 
 class CodedRuntime:
+    """Serving-side companion of an output-coded plan: caches per-group
+    encoders and memoizes decode matrices keyed by the arrival pattern."""
+
     def __init__(self, ir: PlanIR):
         spec = ir.coding
         if spec is None or not spec.n_groups:

@@ -27,6 +27,14 @@ from repro.coding.codes import arrival_shortfall_prob, make_generator
 
 @dataclasses.dataclass(frozen=True)
 class CodingSpec:
+    """Output-coding layout: which slots form MDS groups and where each
+    group's parity shares live.
+
+    Immutable (arrays are frozen); evolve with :meth:`with_`. Share id
+    convention: share ``s < K`` is slot ``s``'s systematic share, share
+    ``K + p`` is parity row ``p``.
+    """
+
     group_of: np.ndarray        # (K,) int64 coded-group id per slot, -1 = replicate
     parity_group: np.ndarray    # (P,) int64 coded-group id per parity share
     parity_member: np.ndarray   # (P, N) bool parity-share device placement
@@ -50,14 +58,17 @@ class CodingSpec:
 
     @property
     def K(self) -> int:
+        """Number of partition slots covered by this spec."""
         return int(self.group_of.shape[0])
 
     @property
     def P(self) -> int:
+        """Total number of parity shares across all groups."""
         return int(self.parity_group.shape[0])
 
     @property
     def n_groups(self) -> int:
+        """Number of coded groups (0 when every slot replicates)."""
         return int(self.group_of.max()) + 1 if (self.group_of >= 0).any() \
             else 0
 
@@ -86,16 +97,19 @@ class CodingSpec:
                                self.K + self.group_parities(c)])
 
     def code_nk(self, c: int) -> Tuple[int, int]:
+        """The (n, k) parameters of group ``c``'s MDS code."""
         k = len(self.group_slots(c))
         return k + len(self.group_parities(c)), k
 
     def generator(self, c: int) -> np.ndarray:
+        """Group ``c``'s (n, k) systematic generator matrix."""
         n, k = self.code_nk(c)
         return make_generator(n, k, self.construction)
 
     # -- the per-group redundancy_mode / code-rate view ---------------------
 
     def mode(self, slot: int) -> str:
+        """Redundancy-mode label for one slot: ``replicate`` or ``coded(n,k)``."""
         c = int(self.group_of[slot])
         if c < 0:
             return "replicate"
@@ -103,6 +117,7 @@ class CodingSpec:
         return f"coded({n},{k})"
 
     def modes(self) -> Tuple[str, ...]:
+        """Per-slot redundancy-mode labels, slot order."""
         return tuple(self.mode(k) for k in range(self.K))
 
     def code_rate(self, slot: int) -> float:
@@ -143,6 +158,7 @@ class CodingSpec:
     # -- functional updates --------------------------------------------------
 
     def with_(self, **changes) -> "CodingSpec":
+        """Return a copy with the given fields replaced (frozen-safe)."""
         return dataclasses.replace(self, **changes)
 
     def drop_device(self, col: int) -> "CodingSpec":

@@ -41,6 +41,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.coding.compute import ComputeCodingSpec
 from repro.coding.spec import CodingSpec
 from repro.core.assignment import StudentArch
 from repro.core.grouping import Device
@@ -93,6 +94,10 @@ class PlanIR:
     # a CodingSpec marks chosen groups as erasure-coded and places their
     # parity shares (see repro.coding)
     coding: Optional[CodingSpec] = None
+    # intermediate-computation coding: chosen slots split their own matmul
+    # into (n, k) compute shards, one per member device (repro.coding
+    # .compute). Mutually exclusive with ``coding``.
+    compute_coding: Optional[ComputeCodingSpec] = None
 
     def __post_init__(self):
         N, S = len(self.device_names), len(self.student_names)
@@ -167,17 +172,50 @@ class PlanIR:
         (or a merely SLOW one: the coded objective is never worse than the
         replicated one, and can beat it)."""
         cs = self.coding
-        if cs is None or not cs.n_groups:
+        cc = self.compute_coding
+        if (cs is None or not cs.n_groups) and (cc is None or not cc.Q):
             return self._member_latency(self.member, self.student_of, alive)
         share = self.share_latencies(alive)
         base = share[:self.K]
         out = np.array(base)
-        for c in range(cs.n_groups):
-            _, k = cs.code_nk(c)
-            slots = cs.group_slots(c)
-            rec = np.sort(share[cs.group_shares(c)])[k - 1]
-            out[slots] = np.minimum(base[slots], rec)
+        if cs is not None:
+            for c in range(cs.n_groups):
+                _, k = cs.code_nk(c)
+                slots = cs.group_slots(c)
+                rec = np.sort(share[cs.group_shares(c)])[k - 1]
+                out[slots] = np.minimum(base[slots], rec)
+        if cc is not None:
+            for q, tt in enumerate(self.compute_shard_latencies(alive)):
+                k = int(cc.k[q])
+                s = int(cc.slots[q])
+                srt = np.sort(tt)
+                out[s] = srt[k - 1] if srt.size >= k else np.inf
         return out
+
+    def compute_shard_latencies(self, alive: Optional[np.ndarray] = None
+                                ) -> Tuple[np.ndarray, ...]:
+        """Per compute-coded slot, the (live) shard arrival latencies in
+        generator-row order: ``latency_nd[stu, dev] / k`` (Eq. 1a with both
+        the FLOP and transmit terms cut by the 1/k output split); ∞ for
+        unplaced or dead shards."""
+        cc = self.compute_coding
+        if cc is None:
+            return ()
+        out = []
+        for q in range(cc.Q):
+            s = int(cc.slots[q])
+            stu = int(self.student_of[s])
+            mem = cc.shard_member[q]
+            k = int(cc.k[q])
+            tt = np.full(len(mem), np.inf)
+            for i, n in enumerate(mem):
+                if n < 0 or stu < 0:
+                    continue
+                if alive is not None and not alive[n]:
+                    continue
+                tt[i] = float(self.latency_nd[stu, n]) / k
+            out.append(tt)
+        return tuple(out)
 
     def objective(self, alive: Optional[np.ndarray] = None) -> float:
         """Eq. 1a outer: blocked by the slowest slot (∞ if any slot serves
@@ -198,6 +236,8 @@ class PlanIR:
         m = self.member if alive is None else self.member & alive[None, :]
         p_out = self.device_caps[None, :, 3]
         out = np.where(m, p_out, 1.0).prod(axis=1)
+        if self.compute_coding is not None and self.compute_coding.Q:
+            out = self._compute_outage(out, alive)
         cs = self.coding
         if cs is None or not cs.n_groups:
             return out
@@ -210,12 +250,33 @@ class PlanIR:
             out[k] = cs.slot_shortfall(int(k), arrive)
         return out
 
+    def _compute_outage(self, out: np.ndarray,
+                        alive: Optional[np.ndarray]) -> np.ndarray:
+        """Overwrite compute-coded slots with the Eq. 1f coded analogue:
+        P(fewer than k of the slot's placed, live shards arrive)."""
+        cc = self.compute_coding
+        p_out = np.array(self.device_caps[:, 3])
+        if alive is not None:
+            p_out = np.where(alive, p_out, 1.0)
+        for q in range(cc.Q):
+            out[int(cc.slots[q])] = cc.slot_shortfall(q, p_out)
+        return out
+
     def quorum(self, alive: Optional[np.ndarray] = None) -> np.ndarray:
         """(K,) bool — the slot's portion is obtainable: at least one (live)
         member, or — for a coded slot — at least k of its group's n shares
         still placeable on (live) devices."""
         m = self.member if alive is None else self.member & alive[None, :]
         ok = m.any(axis=1)
+        cc = self.compute_coding
+        if cc is not None and cc.Q:
+            ok = np.array(ok)
+            for q in range(cc.Q):
+                mem = cc.shard_member[q]
+                placed = mem[mem >= 0]
+                if alive is not None:
+                    placed = placed[alive[placed]]
+                ok[int(cc.slots[q])] = placed.size >= int(cc.k[q])
         cs = self.coding
         if cs is None or not cs.n_groups:
             return ok
@@ -246,7 +307,26 @@ class PlanIR:
         if cs is not None and cs.P:
             pp = self.student_caps[np.maximum(cs.parity_student, 0), 1]
             total += float((pp * cs.parity_member.sum(axis=1)).sum())
+        total += self._compute_overhead(params)
         return total
+
+    def _compute_overhead(self, per_replica: np.ndarray) -> float:
+        """Correction replacing a compute-coded slot's ``n × cost`` member
+        accounting with ``n/k ×`` — each shard holds/computes 1/k of the
+        portion."""
+        cc = self.compute_coding
+        if cc is None or not cc.Q:
+            return 0.0
+        delta = 0.0
+        for q in range(cc.Q):
+            s = int(cc.slots[q])
+            if self.student_of[s] < 0:
+                continue
+            mem = cc.shard_member[q]
+            placed = int((mem >= 0).sum())
+            k = int(cc.k[q])
+            delta += float(per_replica[s]) * placed * (1.0 / k - 1.0)
+        return delta
 
     def deployed_compute(self) -> float:
         """Aggregate deployed compute (shares × portion FLOPs): every
@@ -260,13 +340,18 @@ class PlanIR:
         if cs is not None and cs.P:
             pf = self.student_caps[np.maximum(cs.parity_student, 0), 0]
             total += float((pf * cs.parity_member.sum(axis=1)).sum())
+        total += self._compute_overhead(fl)
         return total
 
     def redundancy_modes(self) -> Tuple[str, ...]:
-        """Per-slot redundancy mode: ``"replicate"`` or ``"coded(n,k)"``."""
-        if self.coding is None:
-            return ("replicate",) * self.K
-        return self.coding.modes()
+        """Per-slot mode: ``"replicate"``, ``"coded(n,k)"`` (output coding)
+        or ``"coded_compute(n,k)"`` (intermediate-computation coding)."""
+        if self.coding is not None:
+            return self.coding.modes()
+        if self.compute_coding is not None:
+            cm = self.compute_coding.modes()
+            return tuple(cm.get(k, "replicate") for k in range(self.K))
+        return ("replicate",) * self.K
 
     def valid_params(self) -> float:
         """S-Valid: one replica per partition (Fig. 4)."""
@@ -315,6 +400,12 @@ class PlanIR:
             self.coding.validate(self.member)
             if self.coding.P and (self.coding.parity_student >= self.S).any():
                 raise ValueError("parity-share student index out of range")
+        if self.compute_coding is not None:
+            if self.coding is not None:
+                raise ValueError(
+                    "a plan carries either output coding or compute coding, "
+                    "not both")
+            self.compute_coding.validate(self.member)
         return self
 
     # -- functional updates --------------------------------------------------
@@ -332,12 +423,17 @@ class PlanIR:
         coding = self.coding
         if coding is not None and coding.P:
             coding = coding.drop_device(int(np.flatnonzero(~keep)[0]))
+        compute_coding = self.compute_coding
+        if compute_coding is not None:
+            compute_coding = compute_coding.drop_device(
+                int(np.flatnonzero(~keep)[0]))
         return self.with_(
             device_names=tuple(n for n in self.device_names if n != name),
             device_caps=self.device_caps[keep],
             member=self.member[:, keep],
             latency_nd=self.latency_nd[:, keep],
             coding=coding,
+            compute_coding=compute_coding,
         )
 
     # -- reconstruction of the object views ----------------------------------
@@ -429,11 +525,15 @@ class PlanIR:
         t, slot, p_out, names = [], [], [], []
         cs = self.coding if (self.coding is not None
                              and self.coding.n_groups) else None
+        cc = self.compute_coding if (self.compute_coding is not None
+                                     and self.compute_coding.Q) else None
         R = self.K + (cs.P if cs is not None else 0)
         share_cols: list = [[] for _ in range(R)]
+        compute_slots = set(int(s) for s in cc.slots) if cc is not None else ()
         for k in range(self.K):
             s = int(self.student_of[k])
-            if s < 0:
+            if s < 0 or k in compute_slots:
+                # compute-coded slots arrive only via their shard shares
                 continue
             for n in np.flatnonzero(self.member[k]):
                 share_cols[k].append(len(t))
@@ -442,6 +542,9 @@ class PlanIR:
                 p_out.append(float(self.device_caps[n, 3]))
                 names.append(self.device_names[n])
         layout = None
+        group_shares: list = []
+        group_slots: list = []
+        group_k: list = []
         if cs is not None:
             for p in range(cs.P):
                 s = int(cs.parity_student[p])
@@ -451,15 +554,37 @@ class PlanIR:
                     slot.append(-1)
                     p_out.append(float(self.device_caps[n, 3]))
                     names.append(self.device_names[n])
+            group_shares += [cs.group_shares(c) for c in range(cs.n_groups)]
+            group_slots += [cs.group_slots(c) for c in range(cs.n_groups)]
+            group_k += [cs.code_nk(c)[1] for c in range(cs.n_groups)]
+        if cc is not None:
+            # one appended share per compute shard, generator-row order; a
+            # shard's Eq. 1a latency is the full portion's divided by k
+            for q in range(cc.Q):
+                sid = int(cc.slots[q])
+                stu = int(self.student_of[sid])
+                kq = int(cc.k[q])
+                ids = []
+                for n in cc.shard_member[q]:
+                    ids.append(len(share_cols))
+                    if n < 0 or stu < 0:
+                        share_cols.append([])
+                        continue
+                    share_cols.append([len(t)])
+                    t.append(float(self.latency_nd[stu, n]) / kq)
+                    slot.append(-1)
+                    p_out.append(float(self.device_caps[n, 3]))
+                    names.append(self.device_names[n])
+                group_shares.append(np.asarray(ids, np.int64))
+                group_slots.append(np.asarray([sid], np.int64))
+                group_k.append(kq)
+        if cs is not None or cc is not None:
             layout = ShareLayout(
                 share_cols=tuple(np.asarray(c, np.int64)
                                  for c in share_cols),
-                group_shares=tuple(cs.group_shares(c)
-                                   for c in range(cs.n_groups)),
-                group_slots=tuple(cs.group_slots(c)
-                                  for c in range(cs.n_groups)),
-                group_k=np.asarray([cs.code_nk(c)[1]
-                                    for c in range(cs.n_groups)], np.int64))
+                group_shares=tuple(group_shares),
+                group_slots=tuple(group_slots),
+                group_k=np.asarray(group_k, np.int64))
         slot_arr = np.asarray(slot, np.int64)
         cols = tuple(np.flatnonzero(slot_arr == k) for k in range(self.K))
         return PlanArrays(np.asarray(t, np.float64), slot_arr,

@@ -179,20 +179,28 @@ def reduce_trials(arrays: PlanArrays, alive: np.ndarray,
 
 def reduce_trials_coded(arrays: PlanArrays, alive: np.ndarray,
                         delay: Optional[np.ndarray] = None,
-                        deadline: Optional[float] = None
-                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                   np.ndarray]:
+                        deadline: Optional[float] = None, *,
+                        return_share_times: bool = False):
     """Coded-recovery reduction over a coded plan's aliveness matrix.
 
     Per-share arrival time = min over the share's replica columns; a coded
     group decodes at the k-th smallest of its n share times (∞ while fewer
     than k arrive — complete iff ≥ k of n shares arrive), covering every
     member slot; a slot's own systematic share also covers it alone (the
-    code is systematic). Replicate slots reduce exactly as before.
+    code is systematic). Compute-coded slots (groups of n shard shares
+    appended by ``PlanIR.to_arrays`` with an empty systematic share) score
+    identically: recovery latency IS the k-th order statistic of shard
+    arrivals — the cancel-on-first-k dispatch model. Replicate slots reduce
+    exactly as before.
 
     Returns ``(lat (T, K), arrived (T, K), latency (T,),
     share_arrived (T, R))`` — the extra share-level mask is what the
-    serving path feeds the decode-weight builder."""
+    serving path feeds the decode-weight builder. With
+    ``return_share_times=True`` a fifth element, the raw per-share arrival
+    times ``share_t (T, R)`` (∞ = never), is appended: the serving path
+    uses it to pick each trial's first-k shard set (later arrivals are
+    cancelled) and the engine uses it to schedule per-share future events
+    on the virtual clock."""
     L = arrays.layout
     if L is None:
         raise ValueError("reduce_trials_coded needs a coded PlanArrays "
@@ -215,6 +223,8 @@ def reduce_trials_coded(arrays: PlanArrays, alive: np.ndarray,
     arrived = np.isfinite(lat)
     latency = np.where(arrived.any(axis=1),
                        np.where(arrived, lat, -np.inf).max(axis=1), np.inf)
+    if return_share_times:
+        return lat, arrived, latency, np.isfinite(share_t), share_t
     return lat, arrived, latency, np.isfinite(share_t)
 
 

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import coded_decode as _cd
+from repro.kernels import coded_matmul as _cm
 from repro.kernels import decode_attention as _dec
 from repro.kernels import dequant_matmul as _dq
 from repro.kernels import flash_attention as _fa
@@ -59,6 +60,7 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
             interpret: Optional[bool] = None):
+    """Root-mean-square layer norm over the last axis, scaled by ``scale``."""
     return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
                        interpret=_auto_interpret(interpret))
 
@@ -84,6 +86,17 @@ def coded_decode(shares, dec, mask, scales=None, *, block_batch: int = 128,
     Returns the recovered portions (B, K, F)."""
     return _cd.coded_decode(shares, dec, mask, scales,
                             block_batch=block_batch,
+                            interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def coded_matmul(x, shards, *, block_batch: int = 128,
+                 interpret: Optional[bool] = None):
+    """Per-shard partial products for intermediate-computation coding.
+    x: (B, D) fp32 activations; shards: (n, D, w) stacked shard weights from
+    :func:`repro.coding.compute.shard_linear_weights` (systematic first).
+    Returns (n, B, w) fp32 — any k rows reconstruct ``x @ W`` exactly."""
+    return _cm.coded_matmul(x, shards, block_batch=block_batch,
                             interpret=_auto_interpret(interpret))
 
 

@@ -89,6 +89,13 @@ def coded_decode_ref(shares, dec, mask, scales=None) -> jnp.ndarray:
     return jnp.einsum("bkr,brf->bkf", w, shares.astype(jnp.float32))
 
 
+def coded_matmul_ref(x, shards) -> jnp.ndarray:
+    """x: (B, D); shards: (n, D, w) stacked compute-shard weights.
+    Returns the (n, B, w) per-shard partial products ``x @ shards[i]``."""
+    return jnp.einsum("bd,ndw->nbw", x.astype(jnp.float32),
+                      shards.astype(jnp.float32))
+
+
 def dequant_matmul_ref(x, q, scale) -> jnp.ndarray:
     """x: (B, D); q: (D, N) int8; scale: () or (N,) fp32."""
     w = q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)

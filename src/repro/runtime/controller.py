@@ -177,7 +177,8 @@ class ClusterController:
 
     def _rebuild(self, alive: np.ndarray, reencoded: Tuple[int, ...] = (),
                  moved: Tuple[str, ...] = ()) -> RepairOutcome:
-        if not reencoded and self.ir.coding is not None:
+        if not reencoded and (self.ir.coding is not None
+                              or self.ir.compute_coding is not None):
             self.ir, reencoded, moved = self._reencode_shares(alive)
             if reencoded and self.ir.quorum(alive).all():
                 out = RepairOutcome(
@@ -222,54 +223,102 @@ class ClusterController:
         only be recomputed from ≥ k live shares of its group, so a group
         that has already lost decode (fewer than k shares live) is NOT
         eligible — its slots fall through to student redeploys via
-        ``plan_repair`` / ``plan_full``."""
+        ``plan_repair`` / ``plan_full``.
+
+        Compute-coded slots re-encode the same way, one tier down: a lost
+        WEIGHT shard (``1/k`` of the slot's linear layer, pre-encoded) is
+        rebuilt onto the lowest-latency live spare whose memory fits the
+        shard (Eq. 1g at ``params / k``), provided ≥ k shards of the slot
+        are still live to source the re-encode. The old placement is
+        dropped — shards are one-per-device by construction."""
         ir = self.ir
         cs = ir.coding
-        if cs is None or not cs.n_groups or not ir.N:
+        cc = ir.compute_coding
+        has_out = cs is not None and cs.n_groups
+        has_cc = cc is not None and cc.Q
+        if (not has_out and not has_cc) or not ir.N:
             return ir, (), ()
         member = np.array(ir.member)
-        pmember = np.array(cs.parity_member)
+        pmember = (np.array(cs.parity_member) if has_out and cs.P
+                   else np.zeros((0, ir.N), bool))
         used = member.any(axis=0)
-        if cs.P:
+        if pmember.size:
             used = used | pmember.any(axis=0)
         spares = [int(n) for n in np.flatnonzero(alive & ~used)]
         params = ir.student_caps[:, 1]
         c_mem = ir.device_caps[:, 1]
-        share_live = np.concatenate([
-            (member & alive[None, :]).any(axis=1),
-            (pmember & alive[None, :]).any(axis=1) if cs.P
-            else np.zeros(0, bool)])
-        lost: List[Tuple[int, int, np.ndarray, int]] = []
-        for c in range(cs.n_groups):
-            shares = cs.group_shares(c)
-            _, k = cs.code_nk(c)
-            if int(share_live[shares].sum()) < k:
-                continue            # undecodable: re-encoding has no source
-            for s in cs.group_slots(c):
-                if not share_live[s]:
-                    lost.append((int(s), int(ir.student_of[s]), member,
-                                 int(s)))
-            for p in cs.group_parities(c):
-                if not share_live[ir.K + int(p)]:
-                    lost.append((ir.K + int(p), int(cs.parity_student[p]),
-                                 pmember, int(p)))
         reencoded: List[int] = []
         moved: List[str] = []
-        for share_id, stu, mat, row in lost:
-            if stu < 0 or not spares:
-                continue
-            fits = [n for n in spares if params[stu] <= c_mem[n]]
-            if not fits:
-                continue
-            best = min(fits, key=lambda n: float(ir.latency_nd[stu, n]))
-            mat[row, best] = True
-            spares.remove(best)
-            reencoded.append(share_id)
-            moved.append(ir.device_names[best])
+        if has_out:
+            share_live = np.concatenate([
+                (member & alive[None, :]).any(axis=1),
+                (pmember & alive[None, :]).any(axis=1) if cs.P
+                else np.zeros(0, bool)])
+            lost: List[Tuple[int, int, np.ndarray, int]] = []
+            for c in range(cs.n_groups):
+                shares = cs.group_shares(c)
+                _, k = cs.code_nk(c)
+                if int(share_live[shares].sum()) < k:
+                    continue        # undecodable: re-encoding has no source
+                for s in cs.group_slots(c):
+                    if not share_live[s]:
+                        lost.append((int(s), int(ir.student_of[s]), member,
+                                     int(s)))
+                for p in cs.group_parities(c):
+                    if not share_live[ir.K + int(p)]:
+                        lost.append((ir.K + int(p),
+                                     int(cs.parity_student[p]),
+                                     pmember, int(p)))
+            for share_id, stu, mat, row in lost:
+                if stu < 0 or not spares:
+                    continue
+                fits = [n for n in spares if params[stu] <= c_mem[n]]
+                if not fits:
+                    continue
+                best = min(fits, key=lambda n: float(ir.latency_nd[stu, n]))
+                mat[row, best] = True
+                spares.remove(best)
+                reencoded.append(share_id)
+                moved.append(ir.device_names[best])
+        new_shard_member = None
+        if has_cc:
+            base = ir.K + (cs.P if cs is not None else 0)
+            new_shard_member = [np.array(m) for m in cc.shard_member]
+            off = 0
+            for q in range(cc.Q):
+                n_q, k_q = cc.code_nk(q)
+                slot = int(cc.slots[q])
+                stu = int(ir.student_of[slot])
+                mem = new_shard_member[q]
+                live_sh = (mem >= 0) & alive[np.maximum(mem, 0)]
+                if int(live_sh.sum()) < k_q or stu < 0:
+                    off += n_q
+                    continue        # undecodable: no re-encode source
+                for j in np.flatnonzero(~live_sh):
+                    fits = [d for d in spares
+                            if params[stu] / k_q <= c_mem[d]]
+                    if not fits:
+                        break
+                    best = min(fits,
+                               key=lambda d: float(ir.latency_nd[stu, d]))
+                    old = int(mem[j])
+                    if old >= 0:
+                        member[slot, old] = False
+                    mem[j] = best
+                    member[slot, best] = True
+                    spares.remove(best)
+                    reencoded.append(int(base + off + j))
+                    moved.append(ir.device_names[best])
+                off += n_q
         if not reencoded:
             return ir, (), ()
-        new_ir = ir.with_(member=member,
-                          coding=cs.with_(parity_member=pmember))
+        kw: Dict = {"member": member}
+        if has_out:
+            kw["coding"] = cs.with_(parity_member=pmember)
+        if new_shard_member is not None:
+            kw["compute_coding"] = cc.with_(
+                shard_member=tuple(new_shard_member))
+        new_ir = ir.with_(**kw)
         return new_ir, tuple(reencoded), tuple(moved)
 
     def _apply(self, out: RepairOutcome) -> None:
@@ -293,6 +342,13 @@ class ClusterController:
         # for replicate slots)
         broken = np.flatnonzero(~ir.quorum(alive))
         if not len(broken) or not N:
+            return None
+        # a broken compute-coded slot cannot be repaired by donating whole
+        # replicas — its members hold 1/k weight shards, and fewer than k
+        # live means the re-encode pass above had no source either. Only a
+        # full replan (which drops the coding layout) can restore it
+        if (ir.compute_coding is not None
+                and np.isin(broken, ir.compute_coding.slots).any()):
             return None
         # parity-share devices are busy too: they must not be treated as
         # free donors (stealing one would silently kill the coded share it
@@ -326,8 +382,13 @@ class ClusterController:
                              if alive[n] and not assigned[n]]
         p_out_all = ir.device_caps[:, 3]
         min_cost = cost.min(axis=0)
+        cc = ir.compute_coding
         for k in range(ir.K):
             if k in broken:
+                continue
+            # compute-coded slots never donate: every member carries one
+            # weight shard, and pulling it would break the 1:1 placement
+            if cc is not None and cc.entry_of(k) >= 0:
                 continue
             members = [int(n) for n in dev_idx if in_slot_live[n]
                        and slot_of[n] == k]
@@ -457,7 +518,7 @@ class ClusterController:
         new_ir = ir.with_(member=member_full, partition=small.partition,
                           student_of=small.student_of,
                           group_idx=small.group_idx, d_th=small.d_th,
-                          coding=None)
+                          coding=None, compute_coding=None)
         mapping = remap_students(ir, new_ir)
         rejit = tuple(
             k for k in range(new_ir.K)

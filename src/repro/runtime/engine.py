@@ -71,6 +71,8 @@ class RequestRecord:
 
 @dataclasses.dataclass
 class BatchRecord:
+    """One dispatched micro-batch (virtual seconds)."""
+
     bid: int
     t_dispatch: float
     t_done: float
@@ -81,25 +83,61 @@ class BatchRecord:
 
 
 @dataclasses.dataclass
+class ShareFuture:
+    """One coded group's partial-result future for one request.
+
+    A coded dispatch (output- or compute-coded) fans a group out as ``n``
+    share computations; the answer completes on the k-th share ARRIVAL and
+    the remaining in-flight shares are cancelled. The engine materializes
+    that as per-share events on the virtual clock: the future completes at
+    the k-th pop (``t_complete``), later pops count as ``cancelled``.
+    Shares that never arrive (dead devices / past deadline) are neither —
+    they were lost, not cancelled.
+    """
+
+    rid: int                        # owning request
+    group: int                      # ShareLayout group index
+    k: int                          # shares needed
+    n: int                          # shares dispatched
+    t_issue: float                  # dispatch time of the owning batch
+    t_complete: float = float("inf")   # k-th share arrival (virtual s)
+    arrived: int = 0                # share arrivals consumed (≤ k)
+    cancelled: int = 0              # in-flight shares cancelled after k-th
+
+    @property
+    def recovery_latency(self) -> float:
+        """Virtual seconds from dispatch to the k-th share arrival."""
+        return self.t_complete - self.t_issue
+
+
+@dataclasses.dataclass
 class EngineReport:
+    """Everything a finished :meth:`ServingEngine.run` measured."""
+
     records: List[RequestRecord]
     batches: List[BatchRecord]
     migrations: List[Tuple[float, Any]]    # (virtual t, RepairOutcome)
     slo: float
+    futures: List[ShareFuture] = dataclasses.field(default_factory=list)
 
     def latencies(self) -> np.ndarray:
+        """End-to-end latencies of every completed request."""
         return np.asarray([r.latency for r in self.records
                            if np.isfinite(r.t_done)])
 
     def summary(self) -> Dict[str, float]:
+        """Aggregate run metrics (throughput, tail latency, quorum rates)."""
         lats = self.latencies()
         done = [r for r in self.records if np.isfinite(r.t_done)]
+        cancelled = int(sum(f.cancelled for f in self.futures))
         if not done:
             return {"n": 0, "throughput": 0.0, "p50": float("inf"),
                     "p99": float("inf"), "slo_attainment": 0.0,
                     "quorum_rate": 0.0, "degraded_rate": 0.0,
                     "mean_batch": 0.0,
-                    "migrations": len(self.migrations)}
+                    "migrations": len(self.migrations),
+                    "share_futures": len(self.futures),
+                    "cancelled_shares": cancelled}
         t0 = min(r.t_arrival for r in done)
         t1 = max(r.t_done for r in done)
         return {
@@ -116,6 +154,10 @@ class EngineReport:
             "mean_batch": float(np.mean([b.n_requests for b in self.batches]))
             if self.batches else 0.0,
             "migrations": len(self.migrations),
+            # coded dispatch accounting: fan-out futures issued and the
+            # in-flight shares the first-k completions cancelled
+            "share_futures": len(self.futures),
+            "cancelled_shares": cancelled,
         }
 
 
@@ -125,6 +167,8 @@ class EngineReport:
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Continuous-batching engine knobs (batch window, SLO, service model)."""
+
     max_batch: int = 16             # batch closes when this many requests …
     max_wait: float = 0.02          # … or when the oldest waited this long
     slo: float = 0.5                # end-to-end latency SLO (virtual s)
@@ -195,6 +239,7 @@ class ServingEngine:
         self._input_rng = np.random.default_rng(self.cfg.seed + 1)
         self.plan_epoch = 0
         self.migrations: List[Tuple[float, Any]] = []
+        self.futures: List[ShareFuture] = []
 
     # -- request payloads ----------------------------------------------------
 
@@ -235,8 +280,14 @@ class ServingEngine:
                 or self._custom_failure):
             self.server.failure = self._failure_for(down)
 
-    def _dispatch(self, now: float, reqs: List[RequestRecord],
-                  bid: int) -> Tuple[float, BatchRecord]:
+    def _dispatch(self, now: float, reqs: List[RequestRecord], bid: int
+                  ) -> Tuple[float, BatchRecord, List[Tuple[float, int]]]:
+        """Serve one micro-batch at virtual time ``now``.
+
+        Returns the batch completion time, its record, and — for coded
+        plans — the ``(arrival_time, future_index)`` share events to put on
+        the virtual clock (one per in-flight share of every fan-out future
+        issued for this batch's requests)."""
         self._apply_control(now)
         xs = [self._input(r.size) for r in reqs]
         rows = sum(r.size for r in reqs)
@@ -262,6 +313,8 @@ class ServingEngine:
         else:
             service = wall
         done_t = now + service
+        share_events: List[Tuple[float, int]] = []
+        layout = None
         for r, res in zip(reqs, results):        # filler result falls off
             r.t_dispatch = now
             r.t_done = done_t
@@ -273,9 +326,30 @@ class ServingEngine:
             r.quorum_ok = bool(res.arrived.all()) and not res.degraded
             r.degraded = bool(res.degraded)
             r.served_latency = float(res.latency)
+            st = getattr(res, "share_times", None)
+            if st is None:
+                continue                      # replicate-only: no fan-out
+            if layout is None:
+                layout = self.server.arrays.layout
+            # one partial-result future per coded group: the request's
+            # answer for that group completes at the k-th share ARRIVAL.
+            # Groups that cannot complete (fewer than k shares in flight)
+            # issue no future — the simulator already scored them failed
+            for c in range(len(layout.group_shares)):
+                t_sh = st[layout.group_shares[c]]
+                finite = np.isfinite(t_sh)
+                k = int(layout.group_k[c])
+                if int(finite.sum()) < k:
+                    continue
+                idx = len(self.futures)
+                self.futures.append(ShareFuture(
+                    rid=r.rid, group=c, k=k, n=int(t_sh.shape[0]),
+                    t_issue=now))
+                share_events.extend(
+                    (now + float(t), idx) for t in t_sh[finite])
         batch = BatchRecord(bid, now, done_t, len(reqs), rows,
                             self.plan_epoch, service)
-        return done_t, batch
+        return done_t, batch, share_events
 
     # -- event loop ----------------------------------------------------------
 
@@ -288,6 +362,7 @@ class ServingEngine:
         -failure models the engine installs are borrowed state."""
         self.plan_epoch = 0
         self.migrations = []
+        self.futures = []
         self._down = set()          # each run re-derives its own chaos state
         saved_failure = self.server.failure
         try:
@@ -307,7 +382,7 @@ class ServingEngine:
 
         heap: List[Tuple[float, int, int, int]] = []
         seq = 0
-        ARRIVE, CLOSE, DONE, CHAOS = 0, 1, 2, 3
+        ARRIVE, CLOSE, DONE, CHAOS, SHARE = 0, 1, 2, 3, 4
         for r in records:
             heapq.heappush(heap, (r.t_arrival, seq, ARRIVE, r.rid))
             seq += 1
@@ -338,10 +413,13 @@ class ServingEngine:
             while queue and in_flight < self.cfg.pipeline_depth and due(now):
                 take = [records[queue.popleft()]
                         for _ in range(min(len(queue), self.cfg.max_batch))]
-                done_t, batch = self._dispatch(now, take, bid)
+                done_t, batch, share_events = self._dispatch(now, take, bid)
                 batches.append(batch)
                 heapq.heappush(heap, (done_t, seq, DONE, bid))
                 seq += 1
+                for t_sh, fut_idx in share_events:
+                    heapq.heappush(heap, (t_sh, seq, SHARE, fut_idx))
+                    seq += 1
                 bid += 1
                 in_flight += 1
             # arm a close timer only while the head still needs to wait; a
@@ -366,6 +444,17 @@ class ServingEngine:
             elif kind == DONE:
                 in_flight -= 1
                 try_dispatch(now)
+            elif kind == SHARE:
+                # cancel-on-first-k: the k-th arrival completes the future;
+                # a share popping after that was in flight when the answer
+                # completed — it is the cancelled speculative work
+                fut = self.futures[payload]
+                if fut.arrived < fut.k:
+                    fut.arrived += 1
+                    if fut.arrived == fut.k:
+                        fut.t_complete = now
+                else:
+                    fut.cancelled += 1
             else:                                    # CHAOS
                 down = set(self.injector.tick())
                 if self.controller is not None:
@@ -373,7 +462,7 @@ class ServingEngine:
                 else:
                     self._down = down
         return EngineReport(records, batches, self.migrations,
-                            self.cfg.slo)
+                            self.cfg.slo, self.futures)
 
     def _warmup(self, sizes: np.ndarray) -> None:
         """Pre-compile the portion forwards for every row bucket the run can

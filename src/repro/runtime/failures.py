@@ -18,6 +18,8 @@ from repro.core.grouping import Device
 
 @dataclasses.dataclass
 class FailureEvent:
+    """One scheduled chaos action: crash or recover ``device`` at a request."""
+
     at_request: int
     device: str
     kind: str = "crash"           # crash | recover
@@ -25,6 +27,8 @@ class FailureEvent:
 
 @dataclasses.dataclass
 class FailureInjector:
+    """Replays a ``FailureEvent`` schedule, tracking the down-device set."""
+
     events: List[FailureEvent]
     _down: set = dataclasses.field(default_factory=set)
     _count: int = 0

@@ -51,6 +51,18 @@ the missing portions via the fused :func:`repro.kernels.coded_decode
 The fused megastep folds forward → encode → decode → merge into ONE
 dispatch; the legacy loop runs the identical math through the jitted ops
 wrappers and remains the bit-identical oracle.
+
+Compute-coded plans (a PlanIR carrying a
+:class:`repro.coding.compute.ComputeCodingSpec`) split a slot's output
+matmul column-wise into k weight shards plus r parity shards — pre-encoded
+at deploy time, each 1/k of the slot's work — and the serve path completes
+the slot from the FIRST k shard arrivals (cancel-on-first-k). When those k
+are exactly the systematic shards the flow is a plain passthrough
+(bit-exact with uncoded serving); otherwise host-built pseudo-inverse
+weights recover the k data blocks via the same fused coded_decode kernel.
+Per-request shard arrival times are exposed on
+:attr:`ServeResult.share_times` so the continuous-batching engine can
+track fan-out futures and count cancelled in-flight shares.
 """
 from __future__ import annotations
 
@@ -83,6 +95,10 @@ class ServeResult:
     latency: float
     arrived: np.ndarray           # (K,) bool
     degraded: bool
+    # coded plans only: per-share arrival times (R_sh,), ∞ = never — the
+    # continuous-batching engine turns these into per-share future events
+    # on its virtual clock (cancel-on-first-k speculation accounting)
+    share_times: Optional[np.ndarray] = None
     _logits: Any = dataclasses.field(default=None, repr=False)
     _span: Optional[Tuple[int, int]] = dataclasses.field(
         default=None, repr=False)
@@ -94,6 +110,8 @@ class ServeResult:
 
     @property
     def logits(self) -> np.ndarray:
+        """This request's merged logits (B, C), materialized lazily from
+        the shared micro-batch buffer."""
         if self._np_logits is None:
             x = self._logits
             if self._span is not None:
@@ -112,6 +130,7 @@ class ServeResult:
 
     @property
     def failed_devices(self) -> List[str]:
+        """Names of the devices that were down for this request."""
         if self._alive is None:
             return []
         return [self._names[j] for j in np.flatnonzero(~self._alive)]
@@ -146,6 +165,7 @@ class FusedStudents:
     pre: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
 
     def padded(self, k: int, width: int) -> Any:
+        """Slot ``k``'s params padded to the uniform feature ``width``."""
         p = self.params[k]
         return self.pad(p, width) if self.pad is not None else p
 
@@ -172,6 +192,13 @@ def _set_stacked_row(stacked: Any, k: int, row: Any) -> Any:
 
 @dataclasses.dataclass
 class QuorumServer:
+    """Quorum-of-portions inference server over a (possibly coded) plan.
+
+    Runs every placed student portion, masks the ones whose devices failed,
+    decodes coded shares when needed, and merges with the fused
+    ``quorum_aggregate`` kernel. Live-migratable via :meth:`migrate`.
+    """
+
     plan: Any                     # planner.Plan or the canonical PlanIR
     portion_fns: List[Callable[[jnp.ndarray], jnp.ndarray]]  # per partition
     fc_weights: jnp.ndarray       # (K, Dk, C) padded per-partition FC slices
@@ -209,7 +236,11 @@ class QuorumServer:
         default=None, init=False, repr=False)
     _fused_step_coded: Optional[Callable] = dataclasses.field(
         default=None, init=False, repr=False)
+    _fused_step_compute: Optional[Callable] = dataclasses.field(
+        default=None, init=False, repr=False)
     _coded_rt: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _compute_rt: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False)
     _fc_q: Optional[Int8Weights] = dataclasses.field(
         default=None, init=False, repr=False)
@@ -321,6 +352,7 @@ class QuorumServer:
         self._fused_stacked = None
         self._fused_step = None
         self._fused_step_coded = None
+        self._fused_step_compute = None
         self._fc_q = None
 
     # -- coded-redundancy state ----------------------------------------------
@@ -339,10 +371,31 @@ class QuorumServer:
             self._coded_rt = rt
         return rt
 
+    def _compute_runtime(self, ir):
+        """The plan's compute-coding glue (per-slot generators + memoized
+        first-k decode weights, see :class:`repro.coding.compute
+        .ComputeRuntime`), rebuilt whenever a migration installs a new IR;
+        None for plans without intermediate-computation coding."""
+        spec = getattr(ir, "compute_coding", None)
+        if spec is None or not spec.Q:
+            return None
+        rt = self._compute_rt
+        if rt is None or rt.ir is not ir:
+            from repro.coding.compute import ComputeRuntime
+            rt = ComputeRuntime(ir)
+            self._compute_rt = rt
+            self._fused_step_compute = None   # closes over the runtime
+        return rt
+
     def _coded_step(self) -> Callable:
         if self._fused_step_coded is None:
             self._fused_step_coded = self._build_fused_step_coded()
         return self._fused_step_coded
+
+    def _compute_step(self) -> Callable:
+        if self._fused_step_compute is None:
+            self._fused_step_compute = self._build_fused_step_compute()
+        return self._fused_step_compute
 
     def _build_fused_step_coded(self) -> Callable:
         """The coded twin of :meth:`_build_fused_step`: (optional int8
@@ -375,10 +428,56 @@ class QuorumServer:
                   if jax.default_backend() != "cpu" else ())
         return jax.jit(step, donate_argnames=donate)
 
+    def _build_fused_step_compute(self) -> Callable:
+        """The compute-coded megastep: vmapped portion forward → per-coded
+        -slot output-column sharding + parity encode (the central emulation
+        of the shard devices' pre-encoded weights) → fused first-k decode
+        via the :func:`repro.kernels.coded_decode.coded_decode` kernel →
+        per-row arrived mask → quorum merge, ONE compiled program.
+        ``decs``/``masks`` arrive as host-built per-request decode weights
+        over each trial's k EARLIEST shard arrivals (the cancel-on-first-k
+        semantics: later shards were cancelled and are never read)."""
+        apply = self.fused.apply
+        pre = self.fused.pre
+        int8 = self.quantize == "int8"
+        interpret = jax.default_backend() != "tpu"
+        rtc = self._compute_runtime(self.ir)
+        entries = [(e.slot, e.k, jnp.asarray(e.G[e.k:], jnp.float32))
+                   for e in rtc.entries]
+
+        def step(stacked, x, decs, masks, row_mask, any_mask, fc_w,
+                 fc_scales, fc_b):
+            params = dequantize_tree(stacked) if int8 else stacked
+            if pre is not None:
+                x = pre(x)                   # shared trunk: once, not K times
+            portions = jax.vmap(apply, in_axes=(0, None))(params, x)
+            rec = {}
+            for (slot, k, Gpar), dec, m in zip(entries, decs, masks):
+                y = portions[slot]                           # (B, Dk)
+                F = y.shape[1]
+                w = -(-F // k)
+                ypad = jnp.pad(y, ((0, 0), (0, k * w - F)))
+                blocks = ypad.reshape(-1, k, w)              # (B, k, w)
+                par = jnp.einsum("rk,bkw->brw", Gpar, blocks)
+                shares = jnp.concatenate([blocks, par], axis=1)
+                decoded = _cd.coded_decode(shares, dec, m,
+                                           interpret=interpret)
+                rec[slot] = decoded.reshape(-1, k * w)[:, :F]
+            portions = jnp.stack([rec.get(s, portions[s])
+                                  for s in range(portions.shape[0])])
+            portions = portions * row_mask.T[:, :, None].astype(portions.dtype)
+            return _qa.quorum_aggregate(portions, fc_w, fc_b, any_mask,
+                                        fc_scales, interpret=interpret)
+
+        donate = (("row_mask", "any_mask")
+                  if jax.default_backend() != "cpu" else ())
+        return jax.jit(step, donate_argnames=donate)
+
     # -- serving -------------------------------------------------------------
 
     def serve(self, x: jnp.ndarray, *,
               rng: Optional[np.random.Generator] = None) -> ServeResult:
+        """Serve one request: ``serve_batch([x])[0]``."""
         return self.serve_batch([x], rng=rng)[0]
 
     def serve_batch(self, xs: Sequence[jnp.ndarray], *,
@@ -409,11 +508,14 @@ class QuorumServer:
         # -- migration handoff snapshot (one read of every mutable field) ----
         fastpath = self.fastpath_active
         rt = self._coded_runtime(self.ir)      # None for replicate-only plans
-        step_coded = None
+        rtc = self._compute_runtime(self.ir)   # None without compute coding
+        step_coded = step_compute = None
         if fastpath:
             stacked, step = self._ensure_fused()
             if rt is not None:
                 step_coded = self._coded_step()
+            if rtc is not None:
+                step_compute = self._compute_step()
             fc_q = self._fc_q
             jitted = None
         else:
@@ -451,21 +553,23 @@ class QuorumServer:
         # re-sampling and re-reducing per micro-batch (this path is the
         # failure-free hot loop; the generator is untouched either way, so
         # the cached rows are bit-identical to the computed ones)
-        share_arrived = None
+        share_arrived = share_t = None
         if (type(failure) is FailureModel and not failure.forced_failures
                 and failure.crash_prob == 0 and not failure.outages):
-            alive1, arrived1, lat1, share1 = self._deterministic_outcome(
-                arrays, deadline)
+            alive1, arrived1, lat1, share1, share_t1 = (
+                self._deterministic_outcome(arrays, deadline))
             alive = np.broadcast_to(alive1, (R, alive1.shape[0]))
             arrived = np.broadcast_to(arrived1, (R, arrived1.shape[0]))
             latency = np.broadcast_to(lat1, (R,))
             if share1 is not None:
                 share_arrived = np.broadcast_to(share1, (R, share1.shape[0]))
+                share_t = np.broadcast_to(share_t1, (R, share_t1.shape[0]))
         else:
             alive, delay = failure.sample(rng, arrays, R)
-            if rt is not None:
-                _, arrived, latency, share_arrived = reduce_trials_coded(
-                    arrays, alive, delay, deadline)
+            if rt is not None or rtc is not None:
+                _, arrived, latency, share_arrived, share_t = (
+                    reduce_trials_coded(arrays, alive, delay, deadline,
+                                        return_share_times=True))
             else:
                 _, arrived, latency = reduce_trials(arrays, alive, delay,
                                                     deadline)
@@ -483,6 +587,13 @@ class QuorumServer:
         decode_needed = (rt is not None and share_arrived is not None
                          and not bool(
                              share_arrived[:, rt.coded_slots].all()))
+        # compute-coded slots decode from the k EARLIEST shard arrivals
+        # (cancel-on-first-k). While those happen to be the systematic
+        # shards — the all-alive steady state, by the planner's placement —
+        # the decode is the identity and the plain path is bit-exact, so it
+        # is skipped exactly like the output-coded fast case above
+        compute_decode = (rtc is not None and share_t is not None
+                          and rtc.needs_decode(share_t))
         if fastpath:
             if fc_q is not None:
                 fc_w, fc_scales = fc_q.q, fc_q.scale
@@ -515,7 +626,48 @@ class QuorumServer:
                     jnp.asarray(any_arrived, jnp.int32))
             return self._package(xs, R, sizes, offs, logits, arrived,
                                  latency, alive, arrays,
-                                 knowledge_gap=knowledge_gap)
+                                 knowledge_gap=knowledge_gap,
+                                 share_t=share_t)
+        if compute_decode:
+            # host side: per-trial first-k decode operators (memoized pinv
+            # per chosen-shard pattern) expanded to rows; the shard products
+            # + parity emulation + decode + merge stay in ONE program
+            decs, masks = rtc.decode_weights(share_t)
+            dec_rows = tuple(np.repeat(d, sizes, axis=0) for d in decs)
+            mask_rows = tuple(np.repeat(m, sizes, axis=0) for m in masks)
+            row_arr = np.repeat(arrived, sizes, axis=0)
+            if fastpath:
+                logits = step_compute(stacked, x_all, dec_rows, mask_rows,
+                                      row_arr, any_arrived, fc_w, fc_scales,
+                                      fc_bias)
+            else:
+                # the oracle loop: full portion forwards, then the SAME
+                # shard-split → parity → first-k decode math through the
+                # jitted ops wrappers
+                x_dev = jnp.asarray(x_all)
+                portions = [jitted[kslot](x_dev) for kslot in range(Kp)]
+                for e, dec, m in zip(rtc.entries, dec_rows, mask_rows):
+                    y = portions[e.slot]                        # (B, Dk)
+                    F = int(y.shape[1])
+                    w = -(-F // e.k)
+                    ypad = jnp.pad(y, ((0, 0), (0, e.k * w - F)))
+                    blocks = ypad.reshape(-1, e.k, w)
+                    par = jnp.einsum("rk,bkw->brw",
+                                     jnp.asarray(e.G[e.k:], jnp.float32),
+                                     blocks)
+                    shares = jnp.concatenate([blocks, par], axis=1)
+                    decoded = K.coded_decode(shares, dec, m)
+                    portions[e.slot] = decoded.reshape(-1, e.k * w)[:, :F]
+                stacked_p = jnp.stack(portions)        # (K, B, Dk)
+                stacked_p = stacked_p * jnp.asarray(
+                    row_arr.T[:, :, None], stacked_p.dtype)
+                logits = K.quorum_aggregate(
+                    stacked_p, fc_weights, fc_bias,
+                    jnp.asarray(any_arrived, jnp.int32))
+            return self._package(xs, R, sizes, offs, logits, arrived,
+                                 latency, alive, arrays,
+                                 knowledge_gap=knowledge_gap,
+                                 share_t=share_t)
         row_arrived = None if clean else np.repeat(arrived, sizes, axis=0)
 
         if fastpath:
@@ -540,11 +692,12 @@ class QuorumServer:
                 stacked_p, fc_weights, fc_bias,
                 jnp.asarray(any_arrived, jnp.int32))
         return self._package(xs, R, sizes, offs, logits, arrived, latency,
-                             alive, arrays, knowledge_gap=knowledge_gap)
+                             alive, arrays, knowledge_gap=knowledge_gap,
+                             share_t=share_t)
 
     def _package(self, xs, R, sizes, offs, logits, arrived, latency, alive,
-                 arrays, *, knowledge_gap: Optional[bool] = None
-                 ) -> List[ServeResult]:
+                 arrays, *, knowledge_gap: Optional[bool] = None,
+                 share_t: Optional[np.ndarray] = None) -> List[ServeResult]:
         """One vectorized pass extracts every per-request scalar (the old
         per-request float()/all() calls were measurable at batch 32)."""
         if knowledge_gap is None:
@@ -562,28 +715,30 @@ class QuorumServer:
             _span=(offs_list[r], offs_list[r + 1]),
             _alive=alive[r],
             _names=arrays.names,
+            share_times=None if share_t is None else share_t[r],
         ) for r in range(R)]
 
     def _deterministic_outcome(self, arrays, deadline: float):
-        """One cached (alive row, arrived row, latency, share row) for the
-        deterministic failure-free model. Keyed by the PlanArrays object —
-        migrations install a fresh object, so stale plans can't hit. The
-        share row is None for replicate-only plans."""
+        """One cached (alive row, arrived row, latency, share-arrived row,
+        share-time row) for the deterministic failure-free model. Keyed by
+        the PlanArrays object — migrations install a fresh object, so stale
+        plans can't hit. The share rows are None for replicate-only plans."""
         key = (id(arrays), deadline)
         hit = self._det_cache.get(key)
         if hit is None or hit[0] is not arrays:
             alive = np.ones((1, len(arrays.names)), bool)
             if arrays.layout is not None:
-                _, arrived, latency, share = reduce_trials_coded(
-                    arrays, alive, None, deadline)
-                share_row = share[0]
+                _, arrived, latency, share, share_t = reduce_trials_coded(
+                    arrays, alive, None, deadline, return_share_times=True)
+                share_row, share_t_row = share[0], share_t[0]
             else:
                 _, arrived, latency = reduce_trials(arrays, alive, None,
                                                     deadline)
-                share_row = None
-            hit = (arrays, alive[0], arrived[0], latency, share_row)
+                share_row = share_t_row = None
+            hit = (arrays, alive[0], arrived[0], latency, share_row,
+                   share_t_row)
             self._det_cache[key] = hit
-        return hit[1], hit[2], hit[3], hit[4]
+        return hit[1], hit[2], hit[3], hit[4], hit[5]
 
     # -- elastic re-planning -------------------------------------------------
 
@@ -741,6 +896,7 @@ class QuorumServer:
         if new_fused is None:
             self._fused_step = None
             self._fused_step_coded = None
+            self._fused_step_compute = None
         self.last_migration = {"rejitted_slots": tuple(rejit),
                                "reused_slots": K_new - len(rejit) - len(zeroed),
                                "refit_slots": tuple(refit),
@@ -868,6 +1024,7 @@ class QuorumServer:
         return ctl.permanent_loss(name)
 
     def live_devices(self) -> List[Device]:
+        """Devices with at least one placed share (systematic or parity)."""
         if isinstance(self.plan, PlanIR):
             devs = self.plan.devices()
             used = self.plan.member.any(0)

@@ -1,0 +1,367 @@
+"""Coded intermediate computation: weight-shard encode → erase ≤ n−k → decode
+exact, Pallas kernel vs einsum oracle, the compute-mode selection pass, the
+simulator's k-th-order-statistic recovery, cancel-on-first-k serving (fused
+vs legacy bit-identity, all-alive passthrough vs the UNCODED plan), engine
+share futures, and the controller's shard re-encode / full-replan paths.
+All seeded — CI fast lane."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.coding import codes as C
+from repro.coding.compute import (ComputeCodingSpec, ComputeRuntime,
+                                  reconstruct_from_shards,
+                                  shard_linear_weights)
+from repro.coding.planner import select_redundancy
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.plan_ir import (PlanIR, device_matrix, eq1a_latency,
+                                student_matrix)
+from repro.core.simulator import FailureModel, reduce_trials_coded
+from repro.runtime.engine import EngineConfig, ServingEngine, build_demo_server
+
+NK = [(3, 2), (5, 3), (8, 5)]
+
+
+# -- weight-shard encode / decode ---------------------------------------------
+
+@pytest.mark.parametrize("n,k", NK)
+@pytest.mark.parametrize("F", [12, 13])          # exact and padded splits
+def test_shard_decode_exact_all_erasures(n, k, F):
+    rng = np.random.default_rng(n * 17 + F)
+    W = rng.standard_normal((6, F)).astype(np.float32)
+    x = rng.standard_normal((4, 6)).astype(np.float32)
+    shards = shard_linear_weights(W, n, k)
+    assert shards.shape == (n, 6, -(-F // k))
+    G = C.make_generator(n, k)
+    partials = np.einsum("bd,ndw->nbw", x, shards)
+    y = x @ W
+    for dead in itertools.combinations(range(n), n - k):
+        arrived = np.ones(n, bool)
+        arrived[list(dead)] = False
+        rec = reconstruct_from_shards(partials, G, arrived, F)
+        np.testing.assert_allclose(rec, y, atol=5e-4, rtol=5e-4)
+
+
+def test_systematic_shards_are_raw_blocks():
+    """Systematic shard products concatenate to the exact layer output —
+    the bit-exact passthrough the all-alive serving path relies on."""
+    rng = np.random.default_rng(0)
+    W = rng.standard_normal((6, 12)).astype(np.float32)
+    x = rng.standard_normal((4, 6)).astype(np.float32)
+    shards = shard_linear_weights(W, 5, 3)
+    np.testing.assert_array_equal(
+        np.concatenate([x @ shards[i] for i in range(3)], axis=1), x @ W)
+
+
+def test_shard_linear_weights_validates():
+    with pytest.raises(ValueError, match="2-D"):
+        shard_linear_weights(np.zeros(3), 3, 2)
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        shard_linear_weights(np.zeros((2, 4)), 2, 3)
+
+
+def test_coded_matmul_kernel_matches_ref():
+    from repro.kernels import ops as K
+    from repro.kernels.ref import coded_matmul_ref
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((9, 6)).astype(np.float32)
+    shards = shard_linear_weights(
+        rng.standard_normal((6, 13)).astype(np.float32), 5, 3)
+    out = K.coded_matmul(x, shards, block_batch=4)
+    np.testing.assert_allclose(out, coded_matmul_ref(x, shards),
+                               atol=1e-5, rtol=1e-5)
+
+
+# -- shared plan fixtures ------------------------------------------------------
+
+def _replicated_ir(pairs=2, spares=6, p_out=0.1, M=8, reps=2):
+    """K slots with ``reps`` replicas each + unassigned spare devices."""
+    n = reps * pairs + spares
+    devs = [Device(f"d{i}", 1e7 * (1 + 0.01 * i), 2e6, 500, p_out)
+            for i in range(n)]
+    names, dcaps = device_matrix(devs)
+    snames, scaps = student_matrix([StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)])
+    member = np.zeros((pairs, n), bool)
+    part = np.zeros((pairs, M), bool)
+    for k in range(pairs):
+        member[k, reps * k:reps * (k + 1)] = True
+        part[k, (M // pairs) * k:(M // pairs) * (k + 1)] = True
+    return PlanIR(names, dcaps, snames, scaps, member, part,
+                  np.zeros(pairs, np.int64), np.arange(pairs, dtype=np.int64),
+                  eq1a_latency(scaps, dcaps), np.zeros((M, M)), 1.0, 0.5)
+
+
+def _compute_ir(**kw):
+    return select_redundancy(_replicated_ir(), code_k=3, parity=2,
+                             mode="compute", **kw)
+
+
+def _pair(ir, **kw):
+    build = dict(feat=8, hidden=16, n_classes=3, seed=0, **kw)
+    return (build_demo_server(ir, **build),
+            build_demo_server(ir, fastpath=False, **build))
+
+
+def _x(rows=3, feat=8, seed=5):
+    return np.random.default_rng(seed).normal(
+        size=(rows, feat)).astype(np.float32)
+
+
+# -- planner compute mode ------------------------------------------------------
+
+def test_select_compute_explicit_parity():
+    rep = _replicated_ir()
+    cc = _compute_ir()
+    assert cc.redundancy_modes() == ("coded_compute(5,3)",) * 2
+    spec = cc.compute_coding
+    assert spec.Q == 2 and spec.n_shards == 10
+    # a slot's recovery latency is the k-th smallest shard latency, each
+    # shard exactly 1/k of the full-replica Eq. 1a latency on its device
+    lat = cc.group_latency()
+    for q in range(spec.Q):
+        shard = np.sort(cc.latency_nd[0, spec.shard_member[q]] / 3)
+        assert lat[int(spec.slots[q])] == pytest.approx(shard[2])
+    assert cc.objective() <= rep.objective() / 3 + 1e-12
+    # deployed compute n/k per slot, vs 2 replicas
+    assert cc.deployed_compute() == pytest.approx(
+        rep.deployed_compute() * (5 / 3) / 2)
+    cc.validate()
+    # the k fastest chosen devices hold the systematic shards
+    lat = cc.latency_nd[0]
+    for q in range(spec.Q):
+        mem = spec.shard_member[q]
+        assert max(lat[mem[:3]]) <= min(lat[mem[3:]]) + 1e-12
+
+
+def test_select_compute_adaptive_commits_and_declines():
+    # low outage + 3-way replication: r = 1 meets the baseline and n/k
+    # (4/3) beats the 3 replicas → commits
+    rich = _replicated_ir(reps=3, spares=4, p_out=0.1)
+    cc = select_redundancy(rich, code_k=3, mode="compute")
+    assert cc.compute_coding is not None
+    assert all(m == "coded_compute(4,3)" for m in cc.redundancy_modes())
+    # flaky fleet: the shortfall never meets the pair baseline within
+    # max_parity → the pass declines (returns the plan unchanged)
+    flaky = _replicated_ir(p_out=0.45, spares=2)
+    out = select_redundancy(flaky, code_k=3, mode="compute")
+    assert out.compute_coding is None
+    assert out.redundancy_modes() == ("replicate",) * 2
+
+
+def test_select_redundancy_mode_guards():
+    with pytest.raises(ValueError, match="unknown redundancy mode"):
+        select_redundancy(_replicated_ir(), mode="bogus")
+    with pytest.raises(ValueError, match="already carries"):
+        select_redundancy(_compute_ir(), mode="compute")
+
+
+def test_spec_drop_device_and_validate():
+    cc = _compute_ir()
+    spec = cc.compute_coding
+    col = int(spec.shard_member[0][1])
+    dropped = spec.drop_device(col)
+    assert int(dropped.shard_member[0][1]) == -1    # shard now unplaced
+    # columns above the dropped one shift down
+    above = spec.shard_member[0] > col
+    np.testing.assert_array_equal(dropped.shard_member[0][above],
+                                  spec.shard_member[0][above] - 1)
+    bad = spec.with_(shard_member=(spec.shard_member[0],
+                                   spec.shard_member[0]))
+    with pytest.raises(ValueError, match="member row disagrees"):
+        bad.validate(cc.member)
+
+
+# -- simulator: k-th order statistic ------------------------------------------
+
+def test_recovery_latency_is_kth_order_statistic():
+    cc = _compute_ir()
+    arrays = cc.to_arrays()
+    rng = np.random.default_rng(0)
+    T = 2000
+    alive = rng.random((T, arrays.names.__len__())) > 0.2
+    delay = rng.exponential(scale=0.3, size=(T, len(arrays.names)))
+    lat, arrived, _, share_ok, share_t = reduce_trials_coded(
+        arrays, alive, delay, None, return_share_times=True)
+    rt = ComputeRuntime(cc)
+    for e in rt.entries:
+        kth = np.sort(share_t[:, e.ids], axis=1)[:, e.k - 1]
+        got = lat[:, e.slot]
+        np.testing.assert_allclose(got[np.isfinite(kth)],
+                                   kth[np.isfinite(kth)])
+        np.testing.assert_array_equal(arrived[:, e.slot], np.isfinite(kth))
+
+
+def test_monte_carlo_complete_rate_matches_eq1f():
+    cc = _compute_ir()
+    arrays = cc.to_arrays()
+    rng = np.random.default_rng(1)
+    T = 40000
+    alive = rng.random((T, len(arrays.names))) > cc.device_caps[:, 3][None, :]
+    _, arrived, _, _ = reduce_trials_coded(arrays, alive, None, None)
+    complete = float(arrived.all(axis=1).mean())
+    analytic = float(np.prod(1.0 - cc.group_outage()))
+    assert complete == pytest.approx(analytic, abs=0.01)
+
+
+# -- ComputeRuntime ------------------------------------------------------------
+
+def test_runtime_first_k_and_needs_decode():
+    cc = _compute_ir()
+    rt = ComputeRuntime(cc)
+    arrays = cc.to_arrays()
+    alive = np.ones((1, len(arrays.names)), bool)
+    *_, share_t = reduce_trials_coded(arrays, alive, None, None,
+                                      return_share_times=True)
+    # all alive: the planner put systematic shards on the k fastest devices,
+    # so the first-k set IS the systematic set → no decode needed
+    assert not rt.needs_decode(share_t)
+    # slow down a systematic shard device → a parity shard enters first-k
+    e = rt.entries[0]
+    delay = np.zeros((1, len(arrays.names)))
+    delay[0, arrays.slot.__len__() - 1] = 0.0
+    sys_cols = arrays.layout.share_cols[e.ids[0]]
+    delay[0, sys_cols] = 10.0
+    *_, st2 = reduce_trials_coded(arrays, alive, delay, None,
+                                  return_share_times=True)
+    assert rt.needs_decode(st2)
+    decs, masks = rt.decode_weights(st2)
+    assert not masks[0][0, 0]                  # slowed shard not consumed
+    assert masks[0].sum() == e.k
+    # unrecoverable rows decode to all-zero weights
+    dead = np.zeros((1, len(arrays.names)), bool)
+    *_, st3 = reduce_trials_coded(arrays, dead, None, None,
+                                  return_share_times=True)
+    decs3, masks3 = rt.decode_weights(st3)
+    assert not masks3[0].any() and not decs3[0].any()
+
+
+# -- serving: cancel-on-first-k ------------------------------------------------
+
+def test_compute_serving_all_alive_bit_identical_to_uncoded():
+    cc = _compute_ir()
+    fused, legacy = _pair(cc)
+    rf = fused.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    rl = legacy.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    np.testing.assert_array_equal(rf.logits, rl.logits)
+    assert not rf.degraded and rf.coverage == 1.0
+    # systematic passthrough: coded logits equal the UNCODED plan's
+    # bit-for-bit — first-k == systematic, the decode is skipped entirely
+    rep_fused, _ = _pair(_replicated_ir())
+    ru = rep_fused.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    np.testing.assert_array_equal(rf.logits, ru.logits)
+    assert rf.share_times is not None
+    rt = ComputeRuntime(cc)
+    for e in rt.entries:
+        assert np.isfinite(rf.share_times[e.ids]).all()
+
+
+def test_compute_serving_decode_bit_identical_fused_vs_legacy():
+    cc = _compute_ir()
+    fused, legacy = _pair(cc)
+    clean = fused.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    victim = cc.device_names[int(cc.compute_coding.shard_member[0][0])]
+    model = FailureModel(forced_failures=[victim], outages=False)
+    fused.failure = legacy.failure = model
+    xs = [_x(), _x(2)]
+    rfs = fused.serve_batch(xs, rng=np.random.default_rng(1))
+    rls = legacy.serve_batch(xs, rng=np.random.default_rng(1))
+    for rf, rl in zip(rfs, rls):
+        assert rf.arrived.all() and not rf.degraded   # parity recovered it
+        np.testing.assert_array_equal(rf.logits, rl.logits)
+        np.testing.assert_allclose(rf.logits,
+                                   clean.logits[:rf.logits.shape[0]],
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_compute_serving_degrades_past_code_distance():
+    cc = _compute_ir()
+    fused, _ = _pair(cc)
+    spec = cc.compute_coding
+    kill = [cc.device_names[int(c)] for c in spec.shard_member[0][:3]]
+    fused.failure = FailureModel(forced_failures=kill, outages=False)
+    r = fused.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    assert not r.arrived[int(spec.slots[0])] and r.degraded
+
+
+def test_compute_serving_stochastic_bit_identical():
+    cc = _compute_ir()
+    fused, legacy = _pair(cc)
+    fused.failure = FailureModel(outages=True)
+    legacy.failure = FailureModel(outages=True)
+    for i in range(6):
+        rf = fused.serve_batch([_x(2, seed=i)],
+                               rng=np.random.default_rng(i))[0]
+        rl = legacy.serve_batch([_x(2, seed=i)],
+                                rng=np.random.default_rng(i))[0]
+        np.testing.assert_array_equal(rf.logits, rl.logits)
+        np.testing.assert_array_equal(rf.arrived, rl.arrived)
+
+
+# -- engine: partial-result futures -------------------------------------------
+
+def test_engine_share_futures_track_first_k():
+    cc = _compute_ir()
+    srv = build_demo_server(cc, feat=8, hidden=16, n_classes=3, seed=0)
+    eng = ServingEngine(srv, EngineConfig(service_model=(1e-3, 1e-4),
+                                          input_dim=8, warmup=False))
+    n_req = 12
+    rep = eng.run(np.linspace(0.0, 0.2, n_req), np.full(n_req, 2))
+    s = rep.summary()
+    assert s["share_futures"] == n_req * 2        # one per coded group
+    assert s["cancelled_shares"] == n_req * 2 * 2  # r = 2 cancelled per group
+    by_rid = {}
+    for f in rep.futures:
+        assert f.arrived == f.k == 3 and f.n == 5 and f.cancelled == 2
+        by_rid.setdefault(f.rid, []).append(f.recovery_latency)
+    for r in rep.records:
+        # the request's quorum latency IS the slowest group's k-th arrival
+        assert max(by_rid[r.rid]) == pytest.approx(r.served_latency)
+
+
+def test_engine_no_futures_for_replicate_plans():
+    rep = _replicated_ir()
+    srv = build_demo_server(rep, feat=8, hidden=16, n_classes=3, seed=0)
+    eng = ServingEngine(srv, EngineConfig(service_model=(1e-3, 1e-4),
+                                          input_dim=8, warmup=False))
+    out = eng.run(np.linspace(0.0, 0.1, 5), np.full(5, 2))
+    assert out.summary()["share_futures"] == 0
+    assert out.summary()["cancelled_shares"] == 0
+
+
+# -- controller: shard re-encode / replan -------------------------------------
+
+def test_controller_reencodes_lost_shard_onto_spare():
+    from repro.runtime.controller import ClusterController
+    cc = select_redundancy(_replicated_ir(spares=8), code_k=3, parity=2,
+                           mode="compute")
+    srv = build_demo_server(cc, feat=8, hidden=16, n_classes=3, seed=0)
+    clean = srv.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    ctl = ClusterController(cc, server=srv)
+    victim = cc.device_names[int(cc.compute_coding.shard_member[0][0])]
+    out = ctl.permanent_loss(victim)
+    assert out.kind == "reencode" and out.feasible
+    assert len(out.reencoded_shares) == 1 and len(out.moved_devices) == 1
+    ctl.ir.validate()
+    assert all(int(m.min()) >= 0
+               for m in ctl.ir.compute_coding.shard_member)
+    r = srv.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    assert r.arrived.all() and not r.degraded
+    np.testing.assert_allclose(r.logits, clean.logits, atol=5e-4, rtol=5e-4)
+
+
+def test_controller_full_replans_undecodable_compute_slot():
+    from repro.runtime.controller import ClusterController
+    cc = select_redundancy(_replicated_ir(spares=8), code_k=3, parity=2,
+                           mode="compute")
+    srv = build_demo_server(cc, feat=8, hidden=16, n_classes=3, seed=0)
+    ctl = ClusterController(cc, server=srv)
+    spec = ctl.ir.compute_coding
+    kill = [ctl.ir.device_names[int(c)] for c in spec.shard_member[0][:3]]
+    out = ctl.observe(kill)
+    assert out is not None and out.kind == "full_replan"
+    assert ctl.ir.compute_coding is None          # layout dropped wholesale
+    ctl.ir.validate()
+    r = srv.serve_batch([_x()], rng=np.random.default_rng(0))[0]
+    assert not r.degraded

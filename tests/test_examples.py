@@ -1,0 +1,93 @@
+"""Fast-lane smoke tests: every ``examples/*.py`` main() runs end-to-end.
+
+Each example is loaded from its file path (``examples/`` is not a package)
+and its heavy knobs — training steps, Monte-Carlo trials, arrival horizons —
+are shrunk by monkeypatching the module's imported symbols, so the full
+control flow (train → plan → serve → repair) executes in seconds.
+"""
+import functools
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+def _load(name: str):
+    """Import ``examples/<name>.py`` as a throwaway module."""
+    spec = importlib.util.spec_from_file_location(
+        f"_example_{name}", EXAMPLES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _shrunk(fn, **overrides):
+    """Wrap ``fn`` forcing the given keyword arguments."""
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        return fn(*args, **{**kw, **overrides})
+    return wrapped
+
+
+def test_quickstart(monkeypatch):
+    mod = _load("quickstart")
+    monkeypatch.setattr(mod, "train_run",
+                        _shrunk(mod.train_run, steps=4, batch=2, seq=32))
+    monkeypatch.setattr(mod, "generate",
+                        _shrunk(mod.generate, prompt_len=8, gen=4, batch=1))
+    monkeypatch.setattr(mod.SIM, "simulate",
+                        _shrunk(mod.SIM.simulate, trials=50))
+    mod.main()
+
+
+def test_train_lm(monkeypatch):
+    mod = _load("train_lm")
+    monkeypatch.setattr(mod, "run",
+                        _shrunk(mod.run, steps=12, batch=2, seq=32,
+                                ckpt_every=4, log_every=4))
+    mod.main()
+
+
+def test_distill_and_serve(monkeypatch):
+    mod = _load("distill_and_serve")
+    monkeypatch.setattr(
+        mod, "build_rocoin",
+        _shrunk(mod.build_rocoin, teacher_steps=3, student_steps=2,
+                batch=16, zoo=["wrn-10-1"]))
+    mod.main()
+
+
+def test_fault_tolerant_serving(monkeypatch):
+    mod = _load("fault_tolerant_serving")
+    monkeypatch.setattr(
+        mod, "build_rocoin",
+        _shrunk(mod.build_rocoin, teacher_steps=3, student_steps=2,
+                batch=16))
+    monkeypatch.setattr(mod, "simulate", _shrunk(mod.simulate, trials=500))
+    mod.main()
+
+
+def test_coded_serving(monkeypatch):
+    mod = _load("coded_serving")
+    monkeypatch.setattr(mod, "simulate", _shrunk(mod.simulate, trials=200))
+    mod.main()
+
+
+def test_streaming_serving(monkeypatch):
+    mod = _load("streaming_serving")
+
+    def short_horizon(cls):
+        class _Short(cls):
+            def generate(self, rng, horizon, *a, **kw):
+                return super().generate(rng, min(horizon, 0.08), *a, **kw)
+        return _Short
+
+    monkeypatch.setattr(mod, "PoissonArrivals",
+                        short_horizon(mod.PoissonArrivals))
+    monkeypatch.setattr(mod, "MMPPArrivals",
+                        short_horizon(mod.MMPPArrivals))
+    mod.main()
