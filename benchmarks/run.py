@@ -15,7 +15,8 @@ import time
 import traceback
 
 MODULES = [
-    "benchmarks.roofline",             # fast: reads the dry-run artifact
+    "benchmarks.roofline",             # drives a tiny dry-run if needed
+    "benchmarks.bench_roofline",       # kernel efficiency vs measured roofline
     "benchmarks.sim_speed",            # Monte-Carlo engine: loop vs vectorized
     "benchmarks.plan_scale",           # PlanIR planner scale + controller
     "benchmarks.bench_fastpath",       # fused fast path: serial vs fused vs int8

@@ -45,6 +45,7 @@ from repro.coding.compute import ComputeCodingSpec
 from repro.coding.spec import CodingSpec
 from repro.core.assignment import StudentArch
 from repro.core.grouping import Device
+from repro.core.hwspec import DeviceSpec, measured_latency_matrix
 
 DEVICE_COLS = ("c_core", "c_mem", "r_tran", "p_out")
 STUDENT_COLS = ("flops", "params", "out_bytes", "capacity")
@@ -67,11 +68,24 @@ def student_matrix(students: Sequence[StudentArch]
     return names, caps
 
 
-def eq1a_latency(student_caps: np.ndarray, device_caps: np.ndarray
+def eq1a_latency(student_caps: np.ndarray, device_caps: np.ndarray,
+                 device_specs: Optional[Sequence[DeviceSpec]] = None
                  ) -> np.ndarray:
-    """Eq. 1a latency matrix (S, N): flops/c_core + 8·out_bytes/r_tran."""
+    """Eq. 1a latency matrix (S, N): flops/c_core + 8·out_bytes/r_tran.
+
+    Measured mode: pass fitted ``device_specs`` (one per device column) and
+    the matrix is ``latency_floor + flops/peak_flops + 8·out_bytes/peak_bw``
+    instead of the declared-capacity model — same shape, same consumers.
+    A spec built by :meth:`DeviceSpec.from_declared` reproduces the
+    declared matrix exactly."""
     scaps = np.asarray(student_caps, np.float64).reshape(-1, 4)
     dcaps = np.asarray(device_caps, np.float64).reshape(-1, 4)
+    if device_specs is not None:
+        if len(device_specs) != dcaps.shape[0]:
+            raise ValueError(
+                f"{len(device_specs)} device specs for {dcaps.shape[0]} "
+                "devices")
+        return measured_latency_matrix(device_specs, scaps)
     return (scaps[:, 0:1] / dcaps[None, :, 0]
             + 8.0 * scaps[:, 2:3] / dcaps[None, :, 2])
 
@@ -98,6 +112,12 @@ class PlanIR:
     # into (n, k) compute shards, one per member device (repro.coding
     # .compute). Mutually exclusive with ``coding``.
     compute_coding: Optional[ComputeCodingSpec] = None
+    # measured mode: fitted per-device specs (repro.core.hwspec.DeviceSpec,
+    # one per device column). When present, ``latency_nd`` is the
+    # measured-model matrix and ``latency_source`` reports "measured" —
+    # the planner, coding mode-selection and engine admission then all
+    # consume microbenched numbers instead of declared capacities.
+    device_specs: Optional[Tuple[DeviceSpec, ...]] = None
 
     def __post_init__(self):
         N, S = len(self.device_names), len(self.student_names)
@@ -121,6 +141,8 @@ class PlanIR:
         object.__setattr__(self, "student_names", tuple(self.student_names))
         object.__setattr__(self, "d_th", float(self.d_th))
         object.__setattr__(self, "p_th", float(self.p_th))
+        if self.device_specs is not None:
+            object.__setattr__(self, "device_specs", tuple(self.device_specs))
 
     # -- shape accessors -----------------------------------------------------
 
@@ -139,6 +161,25 @@ class PlanIR:
     @property
     def S(self) -> int:
         return len(self.student_names)
+
+    @property
+    def latency_source(self) -> str:
+        """``"measured"`` when fitted device specs back ``latency_nd``,
+        ``"declared"`` for the paper's capacity-derived matrix."""
+        return "measured" if self.device_specs is not None else "declared"
+
+    def with_measured_latency(self, specs: Sequence[DeviceSpec]) -> "PlanIR":
+        """The same plan re-anchored to fitted device specs: ``latency_nd``
+        is recomputed from ``specs`` (order must match ``device_names``)
+        and the specs ride along so :meth:`validate` can re-derive it.
+        Every latency consumer — :meth:`objective`, :meth:`group_latency`,
+        :meth:`to_arrays`, the planner and ``select_redundancy`` — then
+        sees measured numbers."""
+        specs = tuple(specs)
+        return self.with_(
+            latency_nd=eq1a_latency(self.student_caps, self.device_caps,
+                                    specs),
+            device_specs=specs)
 
     # -- objective / constraints (Eq. 1a, 1f, 1g) ----------------------------
 
@@ -406,6 +447,16 @@ class PlanIR:
                     "a plan carries either output coding or compute coding, "
                     "not both")
             self.compute_coding.validate(self.member)
+        if self.device_specs is not None:
+            if len(self.device_specs) != self.N:
+                raise ValueError(
+                    f"{len(self.device_specs)} device specs for "
+                    f"{self.N} devices")
+            want = eq1a_latency(self.student_caps, self.device_caps,
+                                self.device_specs)
+            if not np.allclose(self.latency_nd, want, rtol=1e-9, atol=0.0):
+                raise ValueError(
+                    "latency_nd disagrees with the attached device specs")
         return self
 
     # -- functional updates --------------------------------------------------
@@ -427,6 +478,9 @@ class PlanIR:
         if compute_coding is not None:
             compute_coding = compute_coding.drop_device(
                 int(np.flatnonzero(~keep)[0]))
+        specs = self.device_specs
+        if specs is not None:
+            specs = tuple(s for s, k in zip(specs, keep) if k)
         return self.with_(
             device_names=tuple(n for n in self.device_names if n != name),
             device_caps=self.device_caps[keep],
@@ -434,6 +488,7 @@ class PlanIR:
             latency_nd=self.latency_nd[:, keep],
             coding=coding,
             compute_coding=compute_coding,
+            device_specs=specs,
         )
 
     # -- reconstruction of the object views ----------------------------------
@@ -450,10 +505,14 @@ class PlanIR:
 
     @classmethod
     def from_plan(cls, plan, students: Optional[Sequence[StudentArch]] = None,
-                  devices: Optional[Sequence[Device]] = None) -> "PlanIR":
+                  devices: Optional[Sequence[Device]] = None,
+                  device_specs: Optional[Sequence[DeviceSpec]] = None
+                  ) -> "PlanIR":
         """Build the canonical IR from a legacy ``planner.Plan``. Slots are
         ordered by partition index. `students`/`devices` widen the catalogues
-        beyond what the plan references (e.g. the full zoo / fleet)."""
+        beyond what the plan references (e.g. the full zoo / fleet).
+        ``device_specs`` (order matching the device catalogue) switches
+        ``latency_nd`` to the measured model."""
         groups = sorted(plan.groups, key=lambda g: g.partition_idx)
         if devices is None:
             seen: Dict[str, Device] = {}
@@ -485,8 +544,10 @@ class PlanIR:
                 student_of[k] = sidx[g.student.name]
             group_idx[k] = g.group_idx
         return cls(names, dcaps, snames, scaps, member, partition, student_of,
-                   group_idx, eq1a_latency(scaps, dcaps), A,
-                   float(plan.d_th), float(plan.p_th))
+                   group_idx, eq1a_latency(scaps, dcaps, device_specs), A,
+                   float(plan.d_th), float(plan.p_th),
+                   device_specs=(tuple(device_specs)
+                                 if device_specs is not None else None))
 
     def to_plan(self, devices: Optional[Sequence[Device]] = None,
                 students: Optional[Sequence[StudentArch]] = None):

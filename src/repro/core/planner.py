@@ -19,6 +19,7 @@ from repro.core import grouping as GRP
 from repro.core import ncut as NC
 from repro.core.assignment import StudentArch
 from repro.core.grouping import Device
+from repro.core.hwspec import DeviceSpec
 from repro.core.plan_ir import PlanIR, device_matrix, eq1a_latency, student_matrix
 
 
@@ -104,14 +105,18 @@ class _Precomputed:
     recomputed identical spectral partitions for every d_th)."""
 
     def __init__(self, devices: Sequence[Device], A: np.ndarray,
-                 students: Sequence[StudentArch], seed: int):
+                 students: Sequence[StudentArch], seed: int,
+                 device_specs: Optional[Sequence[DeviceSpec]] = None):
         self.devices = list(devices)
         self.A = np.asarray(A, np.float64)
         self.students = list(students)
         self.seed = seed
         self.dnames, self.dcaps = device_matrix(self.devices)
         self.snames, self.scaps = student_matrix(self.students)
-        self.latency_nd = eq1a_latency(self.scaps, self.dcaps)
+        self.device_specs = (tuple(device_specs)
+                             if device_specs is not None else None)
+        self.latency_nd = eq1a_latency(self.scaps, self.dcaps,
+                                       self.device_specs)
         self.caps2 = self.dcaps[:, [1, 0]]          # capacity_vec order
         self._parts: Dict[int, List[np.ndarray]] = {}
 
@@ -133,7 +138,8 @@ def _plan_from_groups(pre: _Precomputed, groups: List[List[int]],
         return PlanIR(pre.dnames, pre.dcaps, pre.snames, pre.scaps,
                       np.zeros((0, N), bool), np.zeros((0, M), bool),
                       np.zeros(0, np.int64), np.zeros(0, np.int64),
-                      pre.latency_nd, pre.A, d_th, p_th)
+                      pre.latency_nd, pre.A, d_th, p_th,
+                      device_specs=pre.device_specs)
     sizes = np.asarray(partition_sizes(pre.A, parts), np.float64)
     member_g = np.zeros((Kp, N), bool)          # groups truncated to Kp, as
     for g, idxs in enumerate(groups[:Kp]):      # in the original Algorithm 1
@@ -151,16 +157,23 @@ def _plan_from_groups(pre: _Precomputed, groups: List[List[int]],
         group_idx[p] = g
     return PlanIR(pre.dnames, pre.dcaps, pre.snames, pre.scaps, member,
                   partition, student_of, group_idx, pre.latency_nd, pre.A,
-                  d_th, p_th)
+                  d_th, p_th, device_specs=pre.device_specs)
 
 
 def make_plan_ir(devices: Sequence[Device], A: np.ndarray,
                  students: Sequence[StudentArch], *, d_th: float,
                  p_th: float, seed: int = 0, repair: bool = False,
+                 device_specs: Optional[Sequence[DeviceSpec]] = None,
                  _pre: Optional[_Precomputed] = None) -> PlanIR:
     """Algorithm 1 on the array path: vectorized follow-the-leader grouping →
-    Ncut partition (K = #groups) → vectorized Eq. 5 → KM assignment."""
-    pre = _pre if _pre is not None else _Precomputed(devices, A, students, seed)
+    Ncut partition (K = #groups) → vectorized Eq. 5 → KM assignment.
+
+    ``device_specs`` (one fitted :class:`DeviceSpec` per device, e.g. from
+    :func:`repro.launch.microbench.fleet_specs_from_microbench`) switches
+    every Eq. 1a evaluation — student selection, KM weights, the returned
+    plan's objective — to the measured latency model."""
+    pre = _pre if _pre is not None else _Precomputed(devices, A, students,
+                                                     seed, device_specs)
     groups = GRP.follow_the_leader_arrays(pre.caps2, pre.dcaps[:, 3],
                                           d_th, p_th, repair=repair)
     return _plan_from_groups(pre, groups, d_th, p_th)
@@ -179,7 +192,9 @@ def make_plan(devices: Sequence[Device], A: np.ndarray,
 def tune_d_th_ir(devices: Sequence[Device], A: np.ndarray,
                  students: Sequence[StudentArch], *, p_th: float,
                  candidates: Optional[Sequence[float]] = None,
-                 seed: int = 0) -> Optional[PlanIR]:
+                 seed: int = 0,
+                 device_specs: Optional[Sequence[DeviceSpec]] = None
+                 ) -> Optional[PlanIR]:
     """The paper picks d_th 'through trial and error' — sweep candidates and
     keep the feasible plan with the lowest Eq. 1a latency.
 
@@ -190,7 +205,7 @@ def tune_d_th_ir(devices: Sequence[Device], A: np.ndarray,
     handful of distinct groupings)."""
     if candidates is None:
         candidates = np.geomspace(0.05, 4.0, 12)
-    pre = _Precomputed(devices, A, students, seed)
+    pre = _Precomputed(devices, A, students, seed, device_specs)
     memo: Dict[Tuple[Tuple[int, ...], ...], PlanIR] = {}
     best: Optional[PlanIR] = None
     for repair in (False, True):   # prefer the paper's pure Alg. 1; repair

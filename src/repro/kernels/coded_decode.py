@@ -59,7 +59,7 @@ def coded_decode(shares: jnp.ndarray, dec: jnp.ndarray, mask: jnp.ndarray,
         scales = jnp.ones((R,), jnp.float32)
     if B == 0:
         return jnp.zeros((0, K, F), jnp.float32)
-    bb = min(block_batch, B)
+    bb = max(1, min(block_batch, B))   # ragged guard: legal grid for any block
     pad = (-B) % bb
     if pad:
         shares = jnp.pad(shares, ((0, pad), (0, 0), (0, 0)))

@@ -44,8 +44,12 @@ def dequant_matmul(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray, *,
     per_channel = scale.ndim == 1
     if B == 0:
         return jnp.zeros((0, N), jnp.float32)
-    bb = min(block_batch, B)
-    bn = min(block_n, N)
+    # ragged-tile guard: clamp blocks into [1, dim] (an oversized or
+    # non-positive block — e.g. a stale tuning-table entry — must degrade to
+    # a legal grid, not a zero-division or a negative pad), then pad the
+    # last tile up to a full block; the pad rows/cols are sliced off below
+    bb = max(1, min(block_batch, B))
+    bn = max(1, min(block_n, N))
     pad_b, pad_n = (-B) % bb, (-N) % bn
     if pad_b:
         x = jnp.pad(x, ((0, pad_b), (0, 0)))

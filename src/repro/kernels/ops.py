@@ -3,6 +3,15 @@
 On CPU (this container) kernels execute in interpret mode — the kernel body
 runs in Python for correctness validation; on TPU the same call compiles to
 Mosaic. `interpret=None` auto-detects.
+
+The serving-path wrappers (`quorum_aggregate`, `coded_decode`,
+`dequant_matmul`) resolve their block sizes through the autotuner's
+shape-keyed tuning table (:mod:`repro.kernels.autotune`) when the caller
+does not pin them: pass ``block_batch=None`` (the default) and the table
+entry for this problem shape wins, falling back to the historical defaults
+on a miss. Resolution happens in a thin non-jitted shim — shapes and dtypes
+are static even on tracers, so the lookup is trace-safe and the inner jitted
+kernels see only concrete static block sizes.
 """
 from __future__ import annotations
 
@@ -12,6 +21,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _at
 from repro.kernels import coded_decode as _cd
 from repro.kernels import coded_matmul as _cm
 from repro.kernels import decode_attention as _dec
@@ -66,27 +76,50 @@ def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
 
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
-def quorum_aggregate(portions, weights, bias, mask, scales=None, *,
-                     block_batch: int = 128,
-                     interpret: Optional[bool] = None):
-    """Fused masked-concat + FC merge of student portions (RoCoIn runtime).
-    Pass int8 ``weights`` with per-slot fp32 ``scales`` (K,) for the
-    quantized-deployment merge (dequant happens in-kernel)."""
+def _quorum_aggregate_jit(portions, weights, bias, mask, scales, *,
+                          block_batch: int, interpret: Optional[bool]):
     return _qa.quorum_aggregate(portions, weights, bias, mask, scales,
                                 block_batch=block_batch,
                                 interpret=_auto_interpret(interpret))
 
 
+def quorum_aggregate(portions, weights, bias, mask, scales=None, *,
+                     block_batch: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """Fused masked-concat + FC merge of student portions (RoCoIn runtime).
+    Pass int8 ``weights`` with per-slot fp32 ``scales`` (K,) for the
+    quantized-deployment merge (dequant happens in-kernel).
+    ``block_batch=None`` consults the autotuning table for this shape."""
+    shape, dtype = _at.key_quorum_aggregate(portions, weights)
+    blocks = _at.resolve("quorum_aggregate", shape, dtype,
+                         {"block_batch": block_batch})
+    return _quorum_aggregate_jit(portions, weights, bias, mask, scales,
+                                 block_batch=blocks["block_batch"],
+                                 interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
-def coded_decode(shares, dec, mask, scales=None, *, block_batch: int = 128,
+def _coded_decode_jit(shares, dec, mask, scales, *, block_batch: int,
+                      interpret: Optional[bool]):
+    return _cd.coded_decode(shares, dec, mask, scales,
+                            block_batch=block_batch,
+                            interpret=_auto_interpret(interpret))
+
+
+def coded_decode(shares, dec, mask, scales=None, *,
+                 block_batch: Optional[int] = None,
                  interpret: Optional[bool] = None):
     """Fused masked decode of erasure-coded shares (coding subsystem).
     shares: (B, R, F) arrived-share tensor (fp32 or int8 with per-share
     ``scales``); dec: (B, K, R) per-request decode weights; mask: (B, R).
-    Returns the recovered portions (B, K, F)."""
-    return _cd.coded_decode(shares, dec, mask, scales,
-                            block_batch=block_batch,
-                            interpret=_auto_interpret(interpret))
+    Returns the recovered portions (B, K, F).
+    ``block_batch=None`` consults the autotuning table for this shape."""
+    shape, dtype = _at.key_coded_decode(shares, dec)
+    blocks = _at.resolve("coded_decode", shape, dtype,
+                         {"block_batch": block_batch})
+    return _coded_decode_jit(shares, dec, mask, scales,
+                             block_batch=blocks["block_batch"],
+                             interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
@@ -102,13 +135,26 @@ def coded_matmul(x, shards, *, block_batch: int = 128,
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "block_n",
                                              "interpret"))
-def dequant_matmul(x, q, scale, *, block_batch: int = 128, block_n: int = 256,
-                   interpret: Optional[bool] = None):
-    """Fused weight-dequant matmul ``x @ (q · scale)`` — int8 weights, fp32
-    activations (weight-only quantized portion forwards)."""
+def _dequant_matmul_jit(x, q, scale, *, block_batch: int, block_n: int,
+                        interpret: Optional[bool]):
     return _dq.dequant_matmul(x, q, scale, block_batch=block_batch,
                               block_n=block_n,
                               interpret=_auto_interpret(interpret))
+
+
+def dequant_matmul(x, q, scale, *, block_batch: Optional[int] = None,
+                   block_n: Optional[int] = None,
+                   interpret: Optional[bool] = None):
+    """Fused weight-dequant matmul ``x @ (q · scale)`` — int8 weights, fp32
+    activations (weight-only quantized portion forwards).
+    ``block_batch=None`` / ``block_n=None`` consult the autotuning table."""
+    shape, dtype = _at.key_dequant_matmul(x, q)
+    blocks = _at.resolve("dequant_matmul", shape, dtype,
+                         {"block_batch": block_batch, "block_n": block_n})
+    return _dequant_matmul_jit(x, q, scale,
+                               block_batch=blocks["block_batch"],
+                               block_n=blocks["block_n"],
+                               interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))

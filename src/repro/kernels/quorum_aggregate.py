@@ -71,7 +71,7 @@ def quorum_aggregate(portions: jnp.ndarray, weights: jnp.ndarray,
         # an empty batch would make bb = 0 and divide the grid by zero;
         # the merge of nothing is the empty logits block
         return jnp.zeros((0, C), jnp.float32)
-    bb = min(block_batch, B)
+    bb = max(1, min(block_batch, B))   # ragged guard: legal grid for any block
     pad = (-B) % bb
     if pad:
         portions = jnp.pad(portions, ((0, 0), (0, pad), (0, 0)))

@@ -1,6 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+# _DRYRUN_HOST_DEVICES lets a caller shrink the forced host-device count
+# (e.g. benchmarks/roofline.py drives --tiny cells in a subprocess with 8)
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("_DRYRUN_EXTRA_XLA", "")
+    + " --xla_force_host_platform_device_count="
+    + os.environ.get("_DRYRUN_HOST_DEVICES", "512")).strip()
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
@@ -23,13 +27,24 @@ import traceback
 
 import jax
 
-from repro.configs.base import all_archs, applicable_shapes, get_config, SHAPES
+from repro.configs.base import (SHAPES, ShapeConfig, all_archs,
+                                applicable_shapes, get_config)
 from repro.launch import roofline as RL
 from repro.launch import steps as ST
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.parallel.sharding import axis_rules
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+# --tiny mode: same shape *kinds* at smoke scale, compiled on a host mesh —
+# lets benchmarks/roofline.py produce a roofline artifact without a 512
+# -device multi-pod sweep
+TINY_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 256, 8, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 512, 4, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 512, 8, "decode"),
+    "long_500k": ShapeConfig("long_500k", 2048, 1, "decode"),
+}
 
 
 def active_param_fraction_tree(cfg):
@@ -55,10 +70,18 @@ def active_param_fraction_tree(cfg):
     return total, active
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True):
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True,
+             tiny: bool = False):
     cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if tiny:
+        from repro.configs.archs import tiny_version
+        cfg = tiny_version(cfg)
+        shape = TINY_SHAPES[shape_name]
+        n = len(jax.devices())
+        mesh = make_host_mesh(2 if n % 2 == 0 and n > 1 else 1)
+    else:
+        shape = SHAPES[shape_name]
+        mesh = make_production_mesh(multi_pod=multi_pod)
     rules = ST.make_rules(cfg, shape, mesh)
     t0 = time.time()
     with axis_rules(rules, mesh), mesh:
@@ -95,7 +118,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True):
     mf_per_chip = mf / n_dev
     rec = {
         "arch": arch, "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": (f"host{n_dev}" if tiny
+                 else "2x16x16" if multi_pod else "16x16"),
+        "tiny": tiny,
         "n_devices": n_dev, "kind": shape.kind,
         "params": total_p, "active_params": active_p,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
@@ -131,6 +156,8 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--single-pod", action="store_true")
     ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke scale: tiny configs/shapes on a host mesh")
     ap.add_argument("--out", type=str, default=str(RESULTS / "dryrun.json"))
     args = ap.parse_args()
 
@@ -156,16 +183,18 @@ def main():
     failures = []
     for arch, sh in cells:
         for mp in meshes:
-            key = f"{arch}|{sh}|{'multi' if mp else 'single'}"
+            mesh_tag = "tiny" if args.tiny else ("multi" if mp else "single")
+            key = f"{arch}|{sh}|{mesh_tag}"
             if key in results and results[key].get("ok") and not args.force:
                 print(f"skip cached {key}")
                 continue
             try:
-                rec = run_cell(arch, sh, mp)
+                rec = run_cell(arch, sh, mp, tiny=args.tiny)
             except Exception as e:
                 traceback.print_exc()
                 rec = {"arch": arch, "shape": sh,
-                       "mesh": "2x16x16" if mp else "16x16",
+                       "mesh": "tiny" if args.tiny
+                       else "2x16x16" if mp else "16x16",
                        "ok": False, "error": f"{type(e).__name__}: {e}"}
                 failures.append(key)
             results[key] = rec

@@ -1,0 +1,182 @@
+"""Microbench → fit: measured device specs from timed forwards + HLO counts.
+
+The paper's Eq. 1a latency model divides declared per-device capacities
+(``c_core``, ``r_tran``); real heterogeneous fleets must be *measured*.
+This harness closes that gap on whatever host it runs on:
+
+1. **Time** portion forwards and kernel launches across a shape sweep
+   (:func:`measure_op`, :func:`portion_forward_samples`) — median-of-reps
+   wall time with a warmup call so compilation never pollutes a sample.
+2. **Count** each op's FLOPs and HBM bytes from its compiled HLO via
+   :func:`repro.launch.roofline.analyze` (loop-aware, fusion-boundary
+   bytes), falling back to caller-provided analytic estimates when the
+   backend cannot render HLO text.
+3. **Fit** ``t ≈ latency_floor + flops/peak_flops + 8·bytes/peak_bw`` by
+   non-negative least squares (:func:`repro.core.hwspec.fit_device_spec`)
+   into a :class:`~repro.core.hwspec.DeviceSpec`.
+
+The fitted host spec is projected onto a declared heterogeneous fleet with
+:func:`~repro.core.hwspec.scaled_fleet_specs` (measured sustained scale ×
+declared capacity ratios), and the resulting specs feed
+``PlanIR.with_measured_latency`` so planning, coding mode-selection and
+engine SLO admission all consume measured numbers. The same samples drive
+the Pallas block-size autotuner (:mod:`repro.kernels.autotune`).
+
+Run standalone for the host-spec artifact::
+
+    PYTHONPATH=src python -m repro.launch.microbench --out benchmarks/results/microbench.json
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hwspec import DeviceSpec, fit_device_spec, scaled_fleet_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSample:
+    """One timed op: wall seconds plus its FLOP/byte footprint."""
+
+    name: str
+    shape: Tuple[int, ...]
+    flops: float
+    xfer_bytes: float
+    wall_s: float
+
+    def to_dict(self) -> dict:
+        """JSON-friendly record."""
+        return {"name": self.name, "shape": list(self.shape),
+                "flops": self.flops, "xfer_bytes": self.xfer_bytes,
+                "wall_s": self.wall_s}
+
+
+def time_callable(fn: Callable, *args, repeats: int = 5,
+                  warmup: int = 1) -> float:
+    """Median wall seconds of ``fn(*args)`` with device sync per call."""
+    import jax
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def hlo_counts(fn: Callable, *args) -> Tuple[float, float]:
+    """(flops, bytes) of ``jit(fn)`` at these args, from the compiled HLO
+    (loop-aware parse); ``(0, 0)`` when the backend can't provide it."""
+    import jax
+
+    from repro.launch import roofline as RL
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        roof = RL.analyze(compiled, 1)
+        return float(roof.flops), float(roof.bytes_accessed)
+    except Exception:
+        return 0.0, 0.0
+
+
+def measure_op(name: str, fn: Callable, args: Sequence, *,
+               flops: Optional[float] = None,
+               xfer_bytes: Optional[float] = None,
+               repeats: int = 5) -> BenchSample:
+    """Time one jitted op and attach its HLO-derived (or provided)
+    FLOP/byte counts. ``flops``/``xfer_bytes`` act as fallbacks when the
+    compiled HLO yields zeros (e.g. an op with no dots)."""
+    import jax
+    jfn = jax.jit(fn)
+    wall = time_callable(jfn, *args, repeats=repeats)
+    hf, hb = hlo_counts(fn, *args)
+    if hf <= 0 and flops is not None:
+        hf = float(flops)
+    if hb <= 0 and xfer_bytes is not None:
+        hb = float(xfer_bytes)
+    shape = tuple(int(d) for a in args
+                  for d in getattr(a, "shape", ()))
+    return BenchSample(name, shape, hf, hb, wall)
+
+
+def portion_forward_samples(*, feat: int = 32, hidden: int = 64,
+                            widths: Sequence[int] = (8, 32, 128),
+                            batches: Sequence[int] = (16, 64, 256, 1024),
+                            seed: int = 0, repeats: int = 5
+                            ) -> List[BenchSample]:
+    """Time the demo-server portion forward ``tanh(x @ trunk) @ head`` over
+    a (batch × head-width) sweep — the serving hot path's student shape
+    family. Returns one sample per cell."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    trunk = jnp.asarray(rng.standard_normal((feat, hidden)), jnp.float32)
+    out: List[BenchSample] = []
+    for w in widths:
+        head = jnp.asarray(rng.standard_normal((hidden, w)), jnp.float32)
+        for b in batches:
+            x = jnp.asarray(rng.standard_normal((b, feat)), jnp.float32)
+            flops = 2.0 * b * feat * hidden + 2.0 * b * hidden * w
+            nbytes = 4.0 * (b * feat + feat * hidden + hidden * w + b * w
+                            + 2 * b * hidden)
+            out.append(measure_op(
+                f"portion_b{b}_w{w}",
+                lambda x, t, h: jnp.tanh(x @ t) @ h, (x, trunk, head),
+                flops=flops, xfer_bytes=nbytes, repeats=repeats))
+    return out
+
+
+def fit_host_spec(samples: Sequence[BenchSample], *,
+                  name: str = "host") -> DeviceSpec:
+    """Least-squares :class:`DeviceSpec` from a sample sweep."""
+    return fit_device_spec(
+        np.array([s.flops for s in samples]),
+        np.array([s.xfer_bytes for s in samples]),
+        np.array([s.wall_s for s in samples]), name=name)
+
+
+def fleet_specs_from_microbench(devices: Sequence,
+                                samples: Optional[Sequence[BenchSample]]
+                                = None) -> Tuple[DeviceSpec, ...]:
+    """Measured specs for a declared fleet: fit the host, project the
+    declared heterogeneity onto the measured scale. Runs a default portion
+    -forward sweep when no samples are given."""
+    if samples is None:
+        samples = portion_forward_samples()
+    return scaled_fleet_specs(fit_host_spec(samples), devices)
+
+
+def samples_to_json(samples: Sequence[BenchSample],
+                    spec: DeviceSpec) -> Dict:
+    """The microbench artifact: fitted spec + raw samples."""
+    return {"spec": spec.to_dict(),
+            "samples": [s.to_dict() for s in samples]}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI: run the default sweep, print + optionally save the fit."""
+    import argparse
+    import pathlib
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default=None,
+                    help="write the microbench artifact JSON here")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+    samples = portion_forward_samples(repeats=args.repeats)
+    spec = fit_host_spec(samples)
+    print(f"fitted {spec.name}: peak_flops={spec.peak_flops:.3e} "
+          f"peak_bw={spec.peak_bw:.3e} floor={spec.latency_floor*1e6:.1f}us "
+          f"({len(samples)} samples)")
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(samples_to_json(samples, spec), indent=1))
+        print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

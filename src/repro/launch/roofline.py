@@ -24,10 +24,15 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-# TPU v5e-class hardware constants (assignment-specified)
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
-HBM_BW = 819e9               # B/s per chip
-LINK_BW = 50e9               # B/s per ICI link
+from repro.core.hwspec import HardwareSpec, TPU_V5E
+
+# TPU v5e-class hardware constants (assignment-specified). Kept as module
+# aliases for backwards compatibility; the overridable record is
+# :class:`repro.core.hwspec.HardwareSpec` and every roofline below carries
+# one (``Roofline.spec``, default :data:`TPU_V5E`).
+PEAK_FLOPS = TPU_V5E.peak_flops      # bf16 FLOP/s per chip
+HBM_BW = TPU_V5E.hbm_bw              # B/s per chip
+LINK_BW = TPU_V5E.link_bw            # B/s per ICI link
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -381,22 +386,25 @@ class Roofline:
     xla_flops: float = 0.0       # raw cost_analysis numbers (loop bodies 1×)
     xla_bytes: float = 0.0
     bytes_bf16: float = 0.0      # bf16-native estimate (CPU f32 artifact undone)
+    # hardware the terms are divided by — override with a fitted/declared
+    # spec to re-anchor the same HLO counts to different silicon
+    spec: HardwareSpec = TPU_V5E
 
     @property
     def compute_s(self) -> float:
-        return self.flops / PEAK_FLOPS
+        return self.flops / self.spec.peak_flops + self.spec.latency_floor
 
     @property
     def memory_s(self) -> float:
-        return self.bytes_accessed / HBM_BW
+        return self.bytes_accessed / self.spec.hbm_bw + self.spec.latency_floor
 
     @property
     def memory_bf16_s(self) -> float:
-        return self.bytes_bf16 / HBM_BW
+        return self.bytes_bf16 / self.spec.hbm_bw
 
     @property
     def collective_s(self) -> float:
-        return self.collective_bytes / LINK_BW
+        return self.collective_bytes / self.spec.link_bw
 
     @property
     def dominant(self) -> str:
@@ -417,8 +425,12 @@ class Roofline:
             "bytes_bf16": self.bytes_bf16, "memory_bf16_s": self.memory_bf16_s,
             "compute_s": self.compute_s, "memory_s": self.memory_s,
             "collective_s": self.collective_s, "dominant": self.dominant,
-            "n_devices": self.n_devices,
+            "n_devices": self.n_devices, "hw_spec": self.spec.name,
         }
+
+    def with_spec(self, spec: HardwareSpec) -> "Roofline":
+        """The same HLO counts re-anchored to different hardware."""
+        return dataclasses.replace(self, spec=spec)
 
 
 def top_bytes(text: str, n_devices: int, top: int = 20):
@@ -448,7 +460,8 @@ def top_bytes(text: str, n_devices: int, top: int = 20):
     return contrib[:top]
 
 
-def analyze(compiled, n_devices: int) -> Roofline:
+def analyze(compiled, n_devices: int,
+            spec: HardwareSpec = TPU_V5E) -> Roofline:
     cost = compiled.cost_analysis()
     if isinstance(cost, list):
         cost = cost[0]
@@ -460,7 +473,7 @@ def analyze(compiled, n_devices: int) -> Roofline:
         hlo = ""
     tot = analyze_hlo(hlo, n_devices)
     return Roofline(tot.flops, tot.bytes, tot.wire_bytes, tot.coll_counts,
-                    n_devices, xla_flops, xla_bytes, tot.bytes16)
+                    n_devices, xla_flops, xla_bytes, tot.bytes16, spec)
 
 
 def model_flops(n_params: int, n_active_params: int, tokens: int,

@@ -62,6 +62,7 @@ class RequestRecord:
     quorum_ok: bool = False         # every partition arrived
     degraded: bool = False
     served_latency: float = float("nan")   # Eq. 1a quorum latency
+    rejected: bool = False          # shed by SLO admission control
 
     @property
     def latency(self) -> float:
@@ -130,6 +131,7 @@ class EngineReport:
         lats = self.latencies()
         done = [r for r in self.records if np.isfinite(r.t_done)]
         cancelled = int(sum(f.cancelled for f in self.futures))
+        rejected = int(sum(r.rejected for r in self.records))
         if not done:
             return {"n": 0, "throughput": 0.0, "p50": float("inf"),
                     "p99": float("inf"), "slo_attainment": 0.0,
@@ -137,7 +139,8 @@ class EngineReport:
                     "mean_batch": 0.0,
                     "migrations": len(self.migrations),
                     "share_futures": len(self.futures),
-                    "cancelled_shares": cancelled}
+                    "cancelled_shares": cancelled,
+                    "admitted": 0, "rejected": rejected}
         t0 = min(r.t_arrival for r in done)
         t1 = max(r.t_done for r in done)
         return {
@@ -158,6 +161,10 @@ class EngineReport:
             # in-flight shares the first-k completions cancelled
             "share_futures": len(self.futures),
             "cancelled_shares": cancelled,
+            # SLO admission control accounting (rejected requests never
+            # dispatch, so they are disjoint from ``done``)
+            "admitted": len(done),
+            "rejected": rejected,
         }
 
 
@@ -188,6 +195,12 @@ class EngineConfig:
     # service_model (or accept compile spikes in measured latencies).
     bucket_rows: bool = True
     warmup: bool = True             # pre-compile before timing (wall mode)
+    # SLO admission control: at batch formation, shed any queued request
+    # whose wait so far plus the plan's predicted quorum latency
+    # (``server.ir.objective()`` — the measured model when the plan carries
+    # fitted DeviceSpecs) already exceeds the SLO, instead of serving a
+    # guaranteed miss
+    admission: bool = False
     seed: int = 0
 
 
@@ -408,8 +421,29 @@ class ServingEngine:
                 or now >= records[queue[0]].t_arrival
                 + self.cfg.max_wait - 1e-12)
 
+        def admit(now: float):
+            """Admission control: drop queued requests that can no longer
+            meet the SLO given the plan's predicted quorum latency. The
+            prediction is ``ir.objective()`` — Eq. 1a on whatever latency
+            model the plan carries, so a measured-mode plan sheds load on
+            microbenched numbers."""
+            if not self.cfg.admission or not queue:
+                return
+            pred = self.server.ir.objective()
+            survivors = [rid for rid in queue
+                         if now - records[rid].t_arrival + pred
+                         <= self.cfg.slo + 1e-12]
+            if len(survivors) != len(queue):
+                for rid in queue:
+                    if now - records[rid].t_arrival + pred \
+                            > self.cfg.slo + 1e-12:
+                        records[rid].rejected = True
+                queue.clear()
+                queue.extend(survivors)
+
         def try_dispatch(now: float):
             nonlocal in_flight, bid, seq, timer_at
+            admit(now)
             while queue and in_flight < self.cfg.pipeline_depth and due(now):
                 take = [records[queue.popleft()]
                         for _ in range(min(len(queue), self.cfg.max_batch))]

@@ -1,0 +1,167 @@
+"""Block-size autotuner tests: table format, precedence, persistence, the
+hysteresis rule, and numeric equivalence of the table-consulted ops path."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as AT
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _isolated_table(monkeypatch):
+    """Never let a test read or write the repo's persisted table."""
+    monkeypatch.delenv("REPRO_TUNING_TABLE", raising=False)
+    saved = AT.active_table()
+    AT.set_table(AT.TuningTable())
+    yield
+    AT.set_table(saved)
+
+
+def test_table_key_format():
+    assert AT.table_key("dequant_matmul", (64, 128, 256), jnp.int8) == \
+        "dequant_matmul|64x128x256|int8"
+    assert AT.table_key("quorum_aggregate", (4, 1024, 16, 10), np.float32) == \
+        "quorum_aggregate|4x1024x16x10|float32"
+
+
+def test_put_get_and_miss():
+    t = AT.TuningTable()
+    t.put("dequant_matmul", (64, 128, 256), jnp.int8,
+          {"block_batch": 32, "block_n": 64})
+    assert t.get("dequant_matmul", (64, 128, 256), jnp.int8) == \
+        {"block_batch": 32, "block_n": 64}
+    # exact-match only: a different shape misses
+    assert t.get("dequant_matmul", (64, 128, 512), jnp.int8) is None
+    assert len(t) == 1
+
+
+def test_save_load_round_trip(tmp_path):
+    t = AT.TuningTable()
+    t.put("quorum_aggregate", (4, 64, 16, 10), jnp.float32,
+          {"block_batch": 64})
+    t.put("coded_decode", (64, 6, 4, 16), jnp.float32, {"block_batch": 32})
+    path = tmp_path / "table.json"
+    t.save(path)
+    loaded = AT.TuningTable.load(path)
+    assert loaded.entries == t.entries
+    # the on-disk format is the flat shape-keyed JSON documented in
+    # docs/performance.md
+    raw = json.loads(path.read_text())
+    assert raw["quorum_aggregate|4x64x16x10|float32"] == {"block_batch": 64}
+
+
+def test_active_table_survives_garbage(tmp_path, monkeypatch):
+    # a corrupt on-disk table must degrade to empty (defaults everywhere),
+    # never crash the serving path
+    path = tmp_path / "bad.json"
+    path.write_text("{not json")
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(path))
+    AT.reset()
+    assert len(AT.active_table()) == 0
+
+
+def test_resolve_precedence():
+    # defaults < table < explicit override
+    shape, dtype = (4, 64, 16, 10), jnp.float32
+    assert AT.resolve("quorum_aggregate", shape, dtype, {}) == \
+        AT.DEFAULTS["quorum_aggregate"]
+    AT.active_table().put("quorum_aggregate", shape, dtype,
+                          {"block_batch": 64})
+    assert AT.resolve("quorum_aggregate", shape, dtype, {}) == \
+        {"block_batch": 64}
+    assert AT.resolve("quorum_aggregate", shape, dtype,
+                      {"block_batch": 32}) == {"block_batch": 32}
+    # a None override defers to the table
+    assert AT.resolve("quorum_aggregate", shape, dtype,
+                      {"block_batch": None}) == {"block_batch": 64}
+
+
+def test_active_table_loads_env_path(tmp_path, monkeypatch):
+    t = AT.TuningTable()
+    t.put("coded_decode", (64, 6, 4, 16), jnp.float32, {"block_batch": 256})
+    path = tmp_path / "env_table.json"
+    t.save(path)
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(path))
+    AT.reset()
+    assert AT.active_table().get("coded_decode", (64, 6, 4, 16),
+                                 jnp.float32) == {"block_batch": 256}
+    monkeypatch.delenv("REPRO_TUNING_TABLE")
+    AT.reset()
+
+
+def test_configs_default_first():
+    for kernel in AT.DEFAULTS:
+        assert AT._configs(kernel)[0] == AT.DEFAULTS[kernel]
+
+
+def _fake_tuning(monkeypatch, times):
+    """Register a synthetic kernel whose candidate timings are fixed."""
+    monkeypatch.setitem(AT.DEFAULTS, "fake", {"block_batch": 32})
+    monkeypatch.setitem(AT.CANDIDATES, "fake",
+                        {"block_batch": tuple(sorted(times))})
+    from repro.launch import microbench
+    monkeypatch.setattr(microbench, "time_callable",
+                        lambda fn, repeats=5, warmup=1: times[fn()])
+    return lambda blocks: (lambda: blocks["block_batch"])
+
+
+def test_tune_call_hysteresis_keeps_default(monkeypatch):
+    # challenger only ~2% faster — under the 5% hysteresis the default wins
+    make_call = _fake_tuning(monkeypatch, {32: 1.00, 64: 0.98})
+    blocks, timings = AT.tune_call("fake", make_call)
+    assert blocks == {"block_batch": 32}
+    assert set(timings) == {"block_batch=32", "block_batch=64"}
+
+
+def test_tune_call_picks_clear_winner(monkeypatch):
+    make_call = _fake_tuning(monkeypatch, {32: 1.00, 64: 0.50})
+    blocks, _ = AT.tune_call("fake", make_call)
+    assert blocks == {"block_batch": 64}
+
+
+def test_tuners_record_entries_ops_consult_them():
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    B, K_, Dk, C = 48, 3, 8, 5
+    portions = jnp.asarray(rng.standard_normal((K_, B, Dk)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K_, Dk, C)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(C), jnp.float32)
+    mask = np.ones(K_, np.int32)
+
+    table = AT.active_table()
+    AT.tune_quorum_aggregate(table, portions, w, bias, mask, repeats=1)
+    shape, dtype = AT.key_quorum_aggregate(portions, w)
+    blocks = table.get("quorum_aggregate", shape, dtype)
+    assert blocks is not None and "block_batch" in blocks
+
+    # the ops shim resolves through the active table and must stay exact
+    # against both the reference and an explicit-blocks call
+    got = ops.quorum_aggregate(portions, w, bias, mask)
+    want = ref.quorum_aggregate_ref(portions, w, bias, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    explicit = ops.quorum_aggregate(portions, w, bias, mask,
+                                    block_batch=blocks["block_batch"])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(explicit))
+
+
+def test_table_entry_changes_resolution_not_result():
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(1)
+    B, D, N = 33, 16, 24
+    x = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    q = jnp.asarray(rng.integers(-127, 128, (D, N)), jnp.int8)
+    sc = jnp.asarray(rng.uniform(0.01, 0.1, (N,)), jnp.float32)
+    want = np.asarray(ref.dequant_matmul_ref(x, q, sc))
+
+    baseline = np.asarray(ops.dequant_matmul(x, q, sc))
+    shape, dtype = AT.key_dequant_matmul(x, q)
+    AT.active_table().put("dequant_matmul", shape, dtype,
+                          {"block_batch": 8, "block_n": 8})
+    tuned = np.asarray(ops.dequant_matmul(x, q, sc))
+    np.testing.assert_allclose(baseline, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(tuned, want, rtol=1e-5, atol=1e-5)

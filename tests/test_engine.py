@@ -302,3 +302,58 @@ def test_engine_on_planned_8_device_fleet():
     s = ServingEngine(srv, _cfg()).run(times, sizes).summary()
     assert s["n"] == len(times)
     assert s["quorum_rate"] == 1.0 and s["slo_attainment"] == 1.0
+
+
+# -- SLO admission control ----------------------------------------------------
+
+def test_admission_off_by_default_serves_everything():
+    cfg = _cfg(max_batch=2, service_model=(2.0, 0.0), slo=5.0)
+    assert cfg.admission is False
+    s = ServingEngine(_server(), cfg).run(np.zeros(12)).summary()
+    assert s["n"] == 12 and s["rejected"] == 0 and s["admitted"] == 12
+
+
+def test_admission_sheds_doomed_requests():
+    """A burst of 12 against a 2-wide server: once queue wait plus the
+    plan's predicted quorum latency exceeds the SLO, the tail is shed —
+    and every request actually served then makes its SLO."""
+    cfg = _cfg(max_batch=2, service_model=(2.0, 0.0), slo=5.0,
+               admission=True)
+    rep = ServingEngine(_server(), cfg).run(np.zeros(12))
+    s = rep.summary()
+    assert s["admitted"] == 4 and s["rejected"] == 8
+    assert s["admitted"] + s["rejected"] == 12
+    assert s["slo_attainment"] == 1.0
+    # rejected requests never reach a batch
+    assert all(r.batch_id == -1 and r.t_done == float("inf")
+               for r in rep.records if r.rejected)
+
+
+def test_admission_noop_when_slo_is_loose():
+    cfg = _cfg(max_batch=8, service_model=(2.0, 0.0), slo=100.0,
+               admission=True)
+    s = ServingEngine(_server(), cfg).run(np.zeros(12)).summary()
+    assert s["rejected"] == 0 and s["admitted"] == 12
+
+
+def test_admission_consumes_measured_latency():
+    """Slower measured device specs raise ir.objective(), so the same
+    arrival trace sheds more load — admission reacts to the microbenched
+    numbers, not just the declared capacities."""
+    from repro.core.hwspec import DeviceSpec, declared_specs
+
+    ir = _toy_ir()
+    devs_specs = tuple(
+        DeviceSpec(n, pf, bw, 0.0)
+        for n, pf, bw in zip(ir.device_names,
+                             ir.device_caps[:, 0], ir.device_caps[:, 2]))
+    slow = tuple(DeviceSpec(s.name, s.peak_flops / 8, s.peak_bw / 8, 0.0)
+                 for s in devs_specs)
+    ir_slow = ir.with_measured_latency(slow)
+    assert ir_slow.objective() > ir.objective()
+
+    cfg = _cfg(max_batch=2, service_model=(2.0, 0.0), slo=5.0,
+               admission=True)
+    base = ServingEngine(_server(ir), cfg).run(np.zeros(12)).summary()
+    shed = ServingEngine(_server(ir_slow), cfg).run(np.zeros(12)).summary()
+    assert shed["rejected"] > base["rejected"]

@@ -526,6 +526,75 @@ def test_dequant_matmul_empty_batch():
     assert out.shape == (0, 3)
 
 
+@pytest.mark.parametrize("B,D,N,bb,bn", [
+    (7, 16, 13, 4, 8),       # both dims ragged vs the block
+    (33, 8, 257, 32, 64),    # one full tile + a 1-wide remainder each way
+    (1, 8, 1, 128, 256),     # blocks far larger than the problem
+    (250, 32, 100, 128, 256),  # defaults against a non-multiple shape
+])
+def test_dequant_matmul_ragged_grid_vs_ref(B, D, N, bb, bn):
+    """Explicit block sizes that don't divide (B, N): the grid pads the
+    last tile and the result must still match the reference exactly."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.dequant_matmul import dequant_matmul
+    rng = np.random.default_rng(B * 1000 + N)
+    x = jnp.asarray(rng.normal(size=(B, D)).astype(np.float32))
+    q = jnp.asarray(rng.integers(-127, 128, (D, N)), jnp.int8)
+    sc = jnp.asarray(rng.uniform(0.01, 0.1, (N,)).astype(np.float32))
+    out = dequant_matmul(x, q, sc, block_batch=bb, block_n=bn,
+                         interpret=True)
+    exp = ref.dequant_matmul_ref(x, q, sc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_matmul_degenerate_blocks_degrade_to_legal_grid():
+    """Nonsensical block sizes (0, negative, larger than the problem) —
+    e.g. a stale tuning-table entry for a shape that shrank — are clamped
+    to a legal grid rather than crashing."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.dequant_matmul import dequant_matmul
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(5, 8)).astype(np.float32))
+    q = jnp.asarray(rng.integers(-127, 128, (8, 6)), jnp.int8)
+    sc = jnp.float32(0.05)
+    exp = np.asarray(ref.dequant_matmul_ref(x, q, sc))
+    for bb, bn in ((0, 0), (-5, 4), (4096, 4096)):
+        out = dequant_matmul(x, q, sc, block_batch=bb, block_n=bn,
+                             interpret=True)
+        np.testing.assert_allclose(np.asarray(out), exp,
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kernel", ["quorum_aggregate", "coded_decode"])
+def test_serving_kernels_ragged_block_batch(kernel):
+    """block_batch not dividing B on the other two tuned kernels."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(4)
+    B = 37
+    if kernel == "quorum_aggregate":
+        p = jnp.asarray(rng.normal(size=(3, B, 8)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(3, 8, 5)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=5).astype(np.float32))
+        m = np.ones(3, np.int32)
+        out = ops.quorum_aggregate(p, w, b, m, block_batch=16)
+        exp = ref.quorum_aggregate_ref(p, w, b, m)
+    else:
+        sh = jnp.asarray(rng.normal(size=(B, 5, 8)).astype(np.float32))
+        dec = jnp.asarray(rng.normal(size=(B, 3, 5)).astype(np.float32))
+        m = jnp.ones((B, 5), jnp.float32)
+        out = ops.coded_decode(sh, dec, m, block_batch=16)
+        exp = ref.coded_decode_ref(sh, dec, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
 # -- engine integration -------------------------------------------------------
 
 def test_engine_serves_fused_and_int8_servers():

@@ -1,0 +1,225 @@
+"""Measured device-spec tests: fit recovery, declared equivalence, and the
+measured-mode PlanIR consumed end-to-end (planner → select_redundancy →
+engine admission)."""
+import numpy as np
+import pytest
+
+from repro.core import planner as PL
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.hwspec import (DeviceSpec, HardwareSpec, declared_specs,
+                               fit_device_spec, measured_latency_matrix,
+                               scaled_fleet_specs)
+from repro.core.plan_ir import PlanIR, eq1a_latency
+
+
+def _fleet(n=6):
+    return [Device(f"d{i}", 2.0 + i, 8.0, 1.0 + 0.5 * i, 0.05)
+            for i in range(n)]
+
+
+def _students(s=4):
+    return [StudentArch(f"s{i}", 1.0 + i, 2.0 + i, 0.5, 1.0 + i)
+            for i in range(s)]
+
+
+def _graph(M=12, seed=0):
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.standard_normal((M, M)))
+    A = 0.5 * (A + A.T)
+    np.fill_diagonal(A, 0)
+    return A
+
+
+# ---------------------------------------------------------------------------
+# the fit
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_synthetic_spec():
+    rng = np.random.default_rng(0)
+    true = DeviceSpec("true", peak_flops=2e9, peak_bw=5e8, latency_floor=2e-4)
+    flops = rng.uniform(1e6, 1e9, 40)
+    nbytes = rng.uniform(1e4, 1e7, 40)
+    wall = true.latency(flops, nbytes)
+    fit = fit_device_spec(flops, nbytes, wall)
+    assert fit.peak_flops == pytest.approx(true.peak_flops, rel=1e-6)
+    assert fit.peak_bw == pytest.approx(true.peak_bw, rel=1e-6)
+    assert fit.latency_floor == pytest.approx(true.latency_floor, rel=1e-6)
+
+
+def test_fit_drops_unbound_terms():
+    # wall time independent of flops: the compute coefficient must go to
+    # zero, which surfaces as an effectively-infinite peak, never a
+    # negative rate — and the fit still predicts the samples
+    flops = np.array([1e6, 2e6, 3e6, 4e6])
+    nbytes = np.array([1e4, 1e4, 1e4, 1e4])
+    wall = np.full(4, 1e-3)
+    fit = fit_device_spec(flops, nbytes, wall)
+    assert fit.peak_flops >= 1e29
+    assert fit.latency_floor >= 0.0 and fit.peak_bw > 0.0
+    assert float(fit.latency(1e6, 1e4)) == pytest.approx(1e-3, rel=1e-3)
+
+
+def test_fit_rejects_mismatched_samples():
+    with pytest.raises(ValueError):
+        fit_device_spec(np.ones(3), np.ones(2), np.ones(3))
+
+
+def test_scaled_fleet_keeps_declared_ratios():
+    host = DeviceSpec("host", peak_flops=1e9, peak_bw=1e8,
+                      latency_floor=1e-4)
+    devs = _fleet(4)
+    specs = scaled_fleet_specs(host, devs)
+    ref_core = max(d.c_core for d in devs)
+    for d, s in zip(devs, specs):
+        assert s.name == d.name
+        assert s.peak_flops == pytest.approx(1e9 * d.c_core / ref_core)
+        assert s.latency_floor == host.latency_floor
+    # the fastest declared device gets exactly the host's measured scale
+    assert max(s.peak_flops for s in specs) == pytest.approx(1e9)
+
+
+def test_device_spec_round_trip():
+    s = DeviceSpec("x", 1.5e9, 2.5e8, 3e-4, source="measured")
+    assert DeviceSpec.from_dict(s.to_dict()) == s
+
+
+def test_hardware_spec_with():
+    assert HardwareSpec().with_(peak_flops=1.0).peak_flops == 1.0
+
+
+# ---------------------------------------------------------------------------
+# declared equivalence + measured PlanIR
+# ---------------------------------------------------------------------------
+
+def test_declared_specs_reproduce_eq1a_exactly():
+    devs, studs = _fleet(), _students()
+    from repro.core.plan_ir import device_matrix, student_matrix
+    _, dcaps = device_matrix(devs)
+    _, scaps = student_matrix(studs)
+    declared = eq1a_latency(scaps, dcaps)
+    measured = measured_latency_matrix(declared_specs(devs), scaps)
+    np.testing.assert_array_equal(declared, measured)
+
+
+def test_eq1a_latency_spec_count_mismatch():
+    devs, studs = _fleet(3), _students(2)
+    from repro.core.plan_ir import device_matrix, student_matrix
+    _, dcaps = device_matrix(devs)
+    _, scaps = student_matrix(studs)
+    with pytest.raises(ValueError):
+        eq1a_latency(scaps, dcaps, declared_specs(devs[:2]))
+
+
+def test_fixed_seed_plan_equivalence_measured_vs_declared():
+    """The acceptance pin: measured specs equal to the declared capacities
+    must plan identically (same groups, partitions, students, latency)."""
+    devs, studs, A = _fleet(), _students(), _graph()
+    ir_d = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0)
+    ir_m = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0,
+                           device_specs=declared_specs(devs))
+    assert ir_d is not None and ir_m is not None
+    np.testing.assert_array_equal(ir_d.member, ir_m.member)
+    np.testing.assert_array_equal(ir_d.partition, ir_m.partition)
+    np.testing.assert_array_equal(ir_d.student_of, ir_m.student_of)
+    np.testing.assert_array_equal(ir_d.latency_nd, ir_m.latency_nd)
+    assert ir_d.latency_source == "declared"
+    assert ir_m.latency_source == "measured"
+    assert ir_m.objective() == ir_d.objective()
+    ir_m.validate()
+
+
+def test_slower_measured_specs_change_the_latency():
+    devs, studs, A = _fleet(), _students(), _graph()
+    slow = tuple(DeviceSpec(s.name, s.peak_flops / 4, s.peak_bw / 4,
+                            1e-2) for s in declared_specs(devs))
+    ir_d = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0)
+    ir_s = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0,
+                           device_specs=slow)
+    assert ir_s.objective() > ir_d.objective()
+
+
+def test_with_measured_latency_round_trip():
+    devs, studs, A = _fleet(), _students(), _graph()
+    ir = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0)
+    specs = declared_specs(devs)
+    ir_m = ir.with_measured_latency(specs).validate()
+    np.testing.assert_array_equal(ir_m.latency_nd, ir.latency_nd)
+    assert ir_m.device_specs == specs
+    # drop_device keeps the spec tuple aligned with the device columns
+    dropped = ir_m.drop_device(ir_m.device_names[0]).validate()
+    assert len(dropped.device_specs) == dropped.N
+    assert dropped.device_specs[0].name == ir_m.device_names[1]
+
+
+def test_validate_rejects_inconsistent_specs():
+    devs, studs, A = _fleet(), _students(), _graph()
+    ir = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0)
+    bad = tuple(DeviceSpec(s.name, s.peak_flops * 2, s.peak_bw, 0.0)
+                for s in declared_specs(devs))
+    with pytest.raises(ValueError, match="disagrees"):
+        ir.with_(device_specs=bad).validate()
+    with pytest.raises(ValueError, match="specs"):
+        ir.with_(device_specs=bad[:2]).validate()
+
+
+def test_from_plan_with_specs_and_to_arrays():
+    devs, studs, A = _fleet(), _students(), _graph()
+    plan = PL.make_plan(devs, A, studs, d_th=1.0, p_th=0.2, seed=0)
+    specs = tuple(DeviceSpec(d.name, 2.0 * d.c_core, 2.0 * d.r_tran, 0.0)
+                  for d in devs)
+    ir = PlanIR.from_plan(plan, students=studs, devices=devs,
+                          device_specs=specs).validate()
+    assert ir.latency_source == "measured"
+    base = PlanIR.from_plan(plan, students=studs, devices=devs)
+    np.testing.assert_allclose(ir.latency_nd, base.latency_nd / 2.0)
+    # the Monte-Carlo view inherits the measured arrival times
+    arr_m, arr_d = ir.to_arrays(), base.to_arrays()
+    np.testing.assert_allclose(arr_m.t, arr_d.t / 2.0)
+
+
+def test_select_redundancy_consumes_measured_latency():
+    from repro.coding.planner import select_redundancy
+    devs, studs, A = _fleet(8), _students(), _graph()
+    ir_d = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0)
+    ir_m = PL.tune_d_th_ir(devs, A, studs, p_th=0.2, seed=0,
+                           device_specs=declared_specs(devs))
+    out_d = select_redundancy(ir_d, code_k=3)
+    out_m = select_redundancy(ir_m, code_k=3)
+    # identical inputs → identical mode selection, and the measured specs
+    # survive the pass
+    assert out_d.redundancy_modes() == out_m.redundancy_modes()
+    assert out_m.device_specs == ir_m.device_specs
+    assert out_m.objective() == pytest.approx(out_d.objective())
+
+
+def test_microbench_fit_pipeline():
+    from repro.launch.microbench import (BenchSample, fit_host_spec,
+                                         fleet_specs_from_microbench,
+                                         samples_to_json)
+    rng = np.random.default_rng(0)
+    true = DeviceSpec("host", 5e9, 8e8, 1e-4)
+    samples = [BenchSample(f"op{i}", (i,), f, b, float(true.latency(f, b)))
+               for i, (f, b) in enumerate(zip(rng.uniform(1e6, 1e9, 12),
+                                              rng.uniform(1e4, 1e7, 12)))]
+    spec = fit_host_spec(samples)
+    assert spec.peak_flops == pytest.approx(true.peak_flops, rel=1e-6)
+    devs = _fleet(4)
+    specs = fleet_specs_from_microbench(devs, samples)
+    assert len(specs) == 4
+    assert max(s.peak_flops for s in specs) == \
+        pytest.approx(spec.peak_flops, rel=1e-6)
+    art = samples_to_json(samples, spec)
+    assert art["spec"]["name"] == "host" and len(art["samples"]) == 12
+
+
+@pytest.mark.slow
+def test_microbench_measures_real_ops():
+    from repro.launch.microbench import fit_host_spec, portion_forward_samples
+    samples = portion_forward_samples(widths=(8, 32), batches=(16, 128),
+                                      repeats=2)
+    assert len(samples) == 4
+    assert all(s.wall_s > 0 for s in samples)
+    assert all(s.flops > 0 for s in samples)
+    spec = fit_host_spec(samples)
+    assert spec.peak_flops > 0 and spec.peak_bw > 0

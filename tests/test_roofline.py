@@ -1,0 +1,167 @@
+"""HLO-parser and hardware-spec tests for launch/roofline.py.
+
+The parser is exercised on small hand-written HLO snippets so each rule —
+while trip-count expansion, dot/convolution FLOP counting, collective
+wire-bytes classification — is pinned independently of any compiled
+artifact."""
+import numpy as np
+import pytest
+
+from repro.core.hwspec import HardwareSpec, TPU_V5E
+from repro.launch import roofline as RL
+
+
+DOT_HLO = """
+ENTRY %main (p0: f32[8,16], p1: f32[16,4]) -> f32[8,4] {
+  %p0 = f32[8,16] parameter(0)
+  %p1 = f32[16,4] parameter(1)
+  ROOT %d = f32[8,4]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_dot_flops_from_contracting_dims():
+    tot = RL.analyze_hlo(DOT_HLO, 1)
+    # 2 * |result| * contract = 2 * (8*4) * 16
+    assert tot.flops == 2.0 * 8 * 4 * 16 == 1024.0
+
+
+def test_dot_bytes_at_boundaries():
+    tot = RL.analyze_hlo(DOT_HLO, 1)
+    # parameters are free; the dot reads both operands and writes its result
+    assert tot.bytes == 4 * (8 * 16 + 16 * 4 + 8 * 4)
+
+
+WHILE_HLO = """
+%body (x: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %a = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant(0)
+  %d = f32[8,16] dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %d)
+}
+
+%cond (x: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> (s32[], f32[8,16]) {
+  %a = f32[8,16] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %a)
+  ROOT %w0 = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body
+}
+"""
+
+
+def test_while_body_expanded_by_trip_count():
+    tot = RL.analyze_hlo(WHILE_HLO, 1)
+    # the body's dot (2 * 8*16 * 16 = 4096 FLOPs) runs 5 times — XLA's own
+    # cost_analysis would report it once
+    assert tot.flops == 5 * 2.0 * 8 * 16 * 16
+
+
+def test_trip_count_parses_comparison_constant():
+    mod = RL.HloModule(WHILE_HLO)
+    assert mod.trip_count("cond") == 5
+    assert mod.entry == "main"
+
+
+CONV_HLO = """
+ENTRY %main (x: f32[1,8,8,4], k: f32[3,3,4,8]) -> f32[1,8,8,8] {
+  %x = f32[1,8,8,4] parameter(0)
+  %k = f32[3,3,4,8] parameter(1)
+  ROOT %c = f32[1,8,8,8] convolution(%x, %k), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+}
+"""
+
+
+def test_convolution_flops():
+    tot = RL.analyze_hlo(CONV_HLO, 1)
+    # 2 * out_elems * kernel_elems_per_output = 2 * (8*8*8) * (3*3*4)
+    assert tot.flops == 2.0 * (8 * 8 * 8) * (3 * 3 * 4)
+
+
+COLLECTIVE_HLO = """
+ENTRY %main (x: f32[1024], y: f32[4096], z: f32[1024]) -> f32[256] {
+  %x = f32[1024] parameter(0)
+  %y = f32[4096] parameter(1)
+  %z = f32[1024] parameter(2)
+  %ar = f32[1024] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = f32[4096] all-gather(%y), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %rs = f32[256] reduce-scatter(%z), replica_groups={{0,1,2,3}}, to_apply=%sum
+}
+"""
+
+
+def test_collective_wire_bytes_classification():
+    tot = RL.analyze_hlo(COLLECTIVE_HLO, 8)
+    assert tot.coll_counts == {"all-reduce": 1, "all-gather": 1,
+                               "reduce-scatter": 1}
+    frac = 3.0 / 4.0                       # ring factor for group size 4
+    want = (2 * 4096 * frac                # all-reduce: 2·size·frac
+            + 16384 * frac                 # all-gather: size·frac
+            + 1024 * 4 * frac)             # reduce-scatter: size·g·frac
+    assert tot.wire_bytes == pytest.approx(want)
+
+
+def test_group_size_fallback_to_n_devices():
+    hlo = """
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024] parameter(0)
+  ROOT %ar = f32[1024] all-reduce(%x), to_apply=%sum
+}
+"""
+    tot = RL.analyze_hlo(hlo, 8)
+    assert tot.wire_bytes == pytest.approx(2 * 4096 * (7.0 / 8.0))
+
+
+def test_hardware_spec_override():
+    r = RL.Roofline(flops=1e12, bytes_accessed=1e9, collective_bytes=1e8,
+                    collective_counts={}, n_devices=1)
+    assert r.spec is TPU_V5E
+    assert r.compute_s == pytest.approx(1e12 / TPU_V5E.peak_flops)
+    slow = HardwareSpec(name="half", peak_flops=TPU_V5E.peak_flops / 2,
+                        hbm_bw=TPU_V5E.hbm_bw / 2,
+                        link_bw=TPU_V5E.link_bw / 2)
+    r2 = r.with_spec(slow)
+    assert r2.compute_s == pytest.approx(2 * r.compute_s)
+    assert r2.memory_s == pytest.approx(2 * r.memory_s)
+    assert r2.collective_s == pytest.approx(2 * r.collective_s)
+    assert r2.to_dict()["hw_spec"] == "half"
+    # module aliases stay wired to the default spec
+    assert RL.PEAK_FLOPS == TPU_V5E.peak_flops
+    assert RL.HBM_BW == TPU_V5E.hbm_bw
+    assert RL.LINK_BW == TPU_V5E.link_bw
+
+
+def test_latency_floor_enters_roofline_terms():
+    r = RL.Roofline(flops=0.0, bytes_accessed=0.0, collective_bytes=0.0,
+                    collective_counts={}, n_devices=1,
+                    spec=HardwareSpec(name="floored", latency_floor=1e-3))
+    assert r.compute_s == pytest.approx(1e-3)
+    assert r.memory_s == pytest.approx(1e-3)
+
+
+def test_analyze_compiled_smoke():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    def f(a, b):
+        return a @ b
+
+    a = jnp.ones((8, 16), jnp.float32)
+    b = jnp.ones((16, 4), jnp.float32)
+    compiled = jax.jit(f).lower(a, b).compile()
+    roof = RL.analyze(compiled, 1)
+    assert roof.flops >= 1024.0            # at least the dot itself
+    assert roof.bytes_accessed > 0
+    custom = HardwareSpec(name="unit", peak_flops=1.0, hbm_bw=1.0, link_bw=1.0)
+    assert RL.analyze(compiled, 1, spec=custom).compute_s == \
+        pytest.approx(roof.flops)
