@@ -1,0 +1,159 @@
+"""Multi-tenant fleet control-plane benchmark (runtime/fleet.py).
+
+The hierarchical fleet's headline claim, measured head to head at N
+tenants (10+) under MMPP-bursty arrivals and a Markov device-flap chaos
+schedule, both arms running the SAME tenant plans, the SAME arrival
+traces, and the SAME failure schedule:
+
+  fleet/shared/nN  — shared spare pool: every tenant plan carries every
+                     spare as an unassigned column, one SparePoolBroker
+                     arbitrates repairs/adoption exclusively, the
+                     ``predicted`` (SLO-urgency) router orders dispatch,
+  fleet/static/nN  — static partitioning: each spare is private to one
+                     tenant (the rest see none), load-only JSQ routing,
+  fleet/gate/nN    — the acceptance verdict: the shared-pool arm must
+                     sustain HIGHER aggregate RPS at NO-WORSE worst-case
+                     per-tenant p99 than static partitioning.
+
+Service times are modelled and plan-tied (``TenantSpec.service_coeffs``:
+a batch takes ``c0 + obj·c1 + obj·c2·rows`` virtual seconds with ``obj``
+the plan's LIVE Eq. 1a objective), so the runs are end-to-end
+deterministic at fixed seeds. What the arms trade on is AVAILABILITY
+under correlated edge-site outages: the chaos schedule flaps whole
+tenants (a Markov chain per SITE — all four member devices down
+together, the failure mode replication inside a site cannot cover).
+Member ``p_out`` (0.3) sits above the plans' ``p_th`` (0.25), so healthy
+groups cannot donate a replica (Eq. 1f): the ONLY repair is claiming
+spare columns. A tenant whose plan can see a free spare repairs both
+slots onto the pool within one dispatch and keeps answering
+quorum-complete; a tenant that cannot serves degraded answers for the
+whole outage. The gate therefore compares quorum-complete GOODPUT
+(degraded answers don't count as served) — the paper's
+failure-resilience claim at fleet scale — plus worst per-tenant p99.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUDGET, emit, make_tenant_plans
+
+N_TENANTS = {"cpu": (12,), "full": (10, 40, 100)}[BUDGET]
+HORIZON = {"cpu": 1.0, "full": 2.0}[BUDGET]
+CHAOS_EVERY = 0.02
+# plan-tied service: base batch = C0 + T1 + T2·rows virtual seconds (the
+# per-tenant coeffs divide by the build-time objective so every tenant
+# starts at the same speed; degradation then scales it by obj/obj0)
+C0, T1, T2 = 1e-3, 4e-3, 1e-3
+# SLO classes cycle gold/silver/bronze across tenants; weight orders the
+# broker arbitration and scales the predicted router's urgency
+CLASSES = (("gold", 0.25, 4.0), ("silver", 0.5, 2.0), ("bronze", 1.0, 1.0))
+
+
+def _traces(n_tenants, seed=0):
+    """One desynchronized MMPP trace per tenant (alternating start state,
+    per-tenant stream) — identical across arms."""
+    from repro.core.scenarios import MMPPArrivals
+    out = []
+    for i in range(n_tenants):
+        mm = MMPPArrivals(rates=(80.0, 700.0), dwell=(0.06, 0.02),
+                          sizes=(1, 2, 4), size_probs=(0.5, 0.3, 0.2),
+                          start_state=i % 2)
+        out.append(mm.generate(np.random.default_rng(seed + 100 + i),
+                               HORIZON))
+    return out
+
+
+def _flap_events(irs, seed=0):
+    """One Markov flap schedule per tenant SITE — an outage takes all of a
+    tenant's member devices down together — replayed identically by both
+    arms (spares never flap: they are the reserve)."""
+    from repro.runtime.failures import FailureEvent, markov_flap_schedule
+    ticks = int(HORIZON / CHAOS_EVERY) + 8
+    sites = markov_flap_schedule([f"site{i}" for i in range(len(irs))],
+                                 0.008, 0.2, ticks,
+                                 np.random.default_rng(seed + 7))
+    return [FailureEvent(e.at_request, n, e.kind) for e in sites
+            for n in irs[int(e.device[4:])].device_names]
+
+
+def _build_arm(n_tenants, shared, seed=0):
+    """Construct one arm's fleet: fresh plans/servers/controllers, spare
+    visibility per the arm (every tenant sees the whole pool vs. a private
+    PAIR for the first ``n_spares/2`` tenants — a site outage kills both
+    slots, so bridging one costs two spares), router policy per the arm."""
+    from repro.runtime.controller import ClusterController
+    from repro.runtime.engine import EngineConfig, build_demo_server
+    from repro.runtime.failures import FailureInjector
+    from repro.runtime.fleet import (Autoscaler, AutoscalerConfig,
+                                     FleetController, FleetEngine,
+                                     FleetRouter, SLOClass, TenantSpec)
+    irs, spares = make_tenant_plans(n_tenants, seed=seed,
+                                    n_spares=2 * max(2, n_tenants // 4))
+    events = _flap_events(irs, seed)
+    tenants = []
+    for i, ir in enumerate(irs):
+        obj0 = float(ir.objective())
+        if shared:
+            ir = ir.add_devices(spares)
+        elif 2 * i < len(spares):
+            ir = ir.add_devices(spares[2 * i:2 * i + 2])
+        srv = build_demo_server(ir, feat=8, hidden=16, n_classes=3, seed=0)
+        ctl = ClusterController(ir, server=srv, seed=0,
+                                require_feasible=False)
+        cname, slo, weight = CLASSES[i % len(CLASSES)]
+        cfg = EngineConfig(max_batch=8, max_wait=0.008, slo=slo,
+                           service_model=None, warmup=False,
+                           pipeline_depth=2, input_dim=8, seed=0)
+        tenants.append(TenantSpec(
+            f"t{i:02d}", srv, controller=ctl,
+            slo=SLOClass(cname, slo=slo, weight=weight), config=cfg,
+            service_coeffs=(C0, T1 / obj0, T2 / obj0)))
+    fc = FleetController(tenants, [s.name for s in spares])
+    scaler = Autoscaler(AutoscalerConfig(every=CHAOS_EVERY, grow_backlog=16,
+                                         shrink_idle=0.1, cooldown=0.05,
+                                         max_per_tenant=2))
+    fleet = FleetEngine(tenants, router=FleetRouter(
+                            "predicted" if shared else "jsq"),
+                        fleet_controller=fc,
+                        injector=FailureInjector(events),
+                        capacity=None,
+                        autoscaler=scaler, chaos_every=CHAOS_EVERY, seed=0)
+    return fleet
+
+
+def _run_arm(n_tenants, shared, seed=0):
+    fleet = _build_arm(n_tenants, shared, seed)
+    report = fleet.run(_traces(n_tenants, seed))
+    return report.summary()
+
+
+def fleet_scale() -> None:
+    """The shared-pool vs. static-partition head-to-head per fleet size."""
+    for n in N_TENANTS:
+        s = _run_arm(n, shared=True)
+        t = _run_arm(n, shared=False)
+        for arm, summ in (("shared", s), ("static", t)):
+            emit(f"fleet/{arm}/n{n}", summ["worst_p99"] * 1e6,
+                 f"rps={summ['aggregate_rps']:.0f};"
+                 f"goodput={summ['goodput_rps']:.0f};"
+                 f"quorum={summ['quorum_rate']:.3f};"
+                 f"completed={summ['completed']};"
+                 f"migrations={summ['migrations']};"
+                 f"p99_mean_us={np.mean(summ['p99_per_tenant']) * 1e6:.0f}")
+        rps_ok = s["goodput_rps"] >= t["goodput_rps"]
+        p99_ok = s["worst_p99"] <= t["worst_p99"] * 1.05 + 1e-9
+        emit(f"fleet/gate/n{n}", 0.0,
+             f"goodput_shared={s['goodput_rps']:.0f};"
+             f"goodput_static={t['goodput_rps']:.0f};"
+             f"p99_shared_us={s['worst_p99'] * 1e6:.0f};"
+             f"p99_static_us={t['worst_p99'] * 1e6:.0f};"
+             f"higher_goodput={int(rps_ok)};p99_no_worse={int(p99_ok)};"
+             f"ok={int(rps_ok and p99_ok)}")
+
+
+def main() -> None:
+    fleet_scale()
+
+
+if __name__ == "__main__":
+    main()

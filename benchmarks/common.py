@@ -54,6 +54,56 @@ def affinity_graph(M: int, seed: int = 0) -> np.ndarray:
     return 0.5 * (A + A.T)
 
 
+def make_tenant_plans(n_tenants: int, *, seed: int = 0,
+                      devices_per_tenant: int = 4, n_spares: int = 4,
+                      p_out: float = 0.3):
+    """Multi-tenant fleet builder: one independent 2-slot plan per tenant on
+    disjoint heterogeneous devices, plus the fleet's shared spare pool.
+
+    Returns ``(irs, spares)`` — per-tenant :class:`PlanIR`\\ s WITHOUT spare
+    columns (each ``bench_fleet`` arm decides which spares a tenant may see
+    via :meth:`PlanIR.add_devices`: all of them for the shared-pool arm, a
+    private partition for the static arm) and the pool's ``Device`` list.
+    Member ``p_out`` (0.3) sits ABOVE the plans' ``p_th`` (0.25) while a
+    two-member group's joint outage (0.09) sits below it, so a healthy
+    group cannot donate a replica under Eq. 1f and a single-member slot is
+    permanently fragile — chaos repairs MUST come from spare columns, the
+    contention the fleet benchmark exists to measure."""
+    import dataclasses as _dc
+
+    from repro.core.plan_ir import (PlanIR, device_matrix, eq1a_latency,
+                                    student_matrix)
+    from repro.core.simulator import make_fleet
+    snames, scaps = student_matrix(paper_students())
+    irs = []
+    M = 8
+    for i in range(n_tenants):
+        devs = [_dc.replace(d, name=f"t{i:02d}.{d.name}", p_out=p_out)
+                for d in make_fleet(devices_per_tenant, seed=seed + i,
+                                    mem_range=(1.0e6, 4e6))]
+        names, dcaps = device_matrix(devs)
+        member = np.zeros((2, len(devs)), bool)
+        member[0, 0::2] = True
+        member[1, 1::2] = True
+        part = np.zeros((2, M), bool)
+        part[0, :M // 2] = True
+        part[1, M // 2:] = True
+        irs.append(PlanIR(names, dcaps, snames, scaps, member, part,
+                          np.zeros(2, np.int64),
+                          np.arange(2, dtype=np.int64),
+                          eq1a_latency(scaps, dcaps), np.zeros((M, M)),
+                          1.0, 0.25).validate())
+    from repro.core.grouping import Device
+    rng = np.random.default_rng(seed + 10_000)
+    spares = [Device(f"spare-{j:02d}",
+                     c_core=float(rng.uniform(2.5e7, 3.5e7)),
+                     c_mem=4e6,
+                     r_tran=float(rng.uniform(0.9e3, 1.1e3)),
+                     p_out=0.05)
+              for j in range(n_spares)]
+    return irs, spares
+
+
 def int8_fidelity(fp32_srv, int8_srv, feat: int, rows: int = 256
                   ) -> tuple:
     """(top-1 agreement, max relative logit error) of an int8-deployed

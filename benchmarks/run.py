@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.plan_scale",           # PlanIR planner scale + controller
     "benchmarks.bench_fastpath",       # fused fast path: serial vs fused vs int8
     "benchmarks.bench_serving",        # continuous-batching engine + chaos
+    "benchmarks.bench_fleet",          # multi-tenant fleet: shared spare pool
     "benchmarks.bench_coding",         # replicate-K vs coded-(n,k) redundancy
     "benchmarks.bench_coded_compute",  # first-k compute shards vs stragglers
     "benchmarks.fig4_redundancy",      # planner only

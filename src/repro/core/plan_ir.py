@@ -491,6 +491,65 @@ class PlanIR:
             device_specs=specs,
         )
 
+    def add_devices(self, devices: Sequence[Device],
+                    specs: Optional[Sequence[DeviceSpec]] = None
+                    ) -> "PlanIR":
+        """Widen the device axis with new UNASSIGNED columns — how a tenant
+        plan gains visibility of the fleet's shared spare pool without any
+        placement changing. New columns carry no membership, no parity
+        share and no compute shard; ``latency_nd`` grows the matching
+        Eq. 1a columns (from ``specs`` when this IR runs the measured
+        model, from declared capacities otherwise — missing specs fall
+        back to :meth:`DeviceSpec.from_declared`). Devices already in the
+        catalogue are skipped, so re-offering the same spare pool is
+        idempotent."""
+        have = set(self.device_names)
+        fresh = [d for d in devices if d.name not in have]
+        if not fresh:
+            return self
+        by_name = ({s.name: s for s in specs} if specs is not None else {})
+        new_names, new_caps = device_matrix(fresh)
+        kw: Dict = {
+            "device_names": self.device_names + new_names,
+            "device_caps": np.concatenate([self.device_caps, new_caps]),
+            "member": np.concatenate(
+                [self.member, np.zeros((self.K, len(fresh)), bool)], axis=1),
+        }
+        if self.device_specs is not None:
+            new_specs = tuple(by_name.get(d.name, DeviceSpec.from_declared(d))
+                              for d in fresh)
+            kw["device_specs"] = self.device_specs + new_specs
+            new_cols = eq1a_latency(self.student_caps, new_caps, new_specs)
+        else:
+            new_cols = eq1a_latency(self.student_caps, new_caps)
+        kw["latency_nd"] = np.concatenate([self.latency_nd, new_cols],
+                                          axis=1)
+        if self.coding is not None and self.coding.P:
+            pm = np.concatenate(
+                [self.coding.parity_member,
+                 np.zeros((self.coding.P, len(fresh)), bool)], axis=1)
+            kw["coding"] = self.coding.with_(parity_member=pm)
+        # compute_coding stores device *indices*; appending columns at the
+        # end leaves every existing index valid
+        return self.with_(**kw)
+
+    def fleet_slice(self, names: Sequence[str]) -> "PlanIR":
+        """Tenant view of a fleet-wide catalogue: restrict the device axis
+        to ``names`` (this IR's column order is preserved). Placements on
+        devices outside the slice are dropped — the fleet builder slices
+        along assignment boundaries, so a tenant's plan stays independently
+        valid and two tenants' slices share no assigned column. Unknown
+        names raise."""
+        want = set(names)
+        missing = want - set(self.device_names)
+        if missing:
+            raise KeyError(f"unknown devices in slice: {sorted(missing)}")
+        out = self
+        for n in self.device_names:
+            if n not in want:
+                out = out.drop_device(n)
+        return out.validate()
+
     # -- reconstruction of the object views ----------------------------------
 
     def devices(self) -> Tuple[Device, ...]:

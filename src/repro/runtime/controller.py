@@ -82,20 +82,33 @@ class ClusterController:
     injector:  optional ``FailureInjector`` driving :meth:`step`/:meth:`run`.
     force_full: disable incremental repair (full replan on every event) —
                the comparison baseline used by benchmarks and tests.
+    spare_broker: optional spare-pool arbiter (duck-typed; see
+               :class:`repro.runtime.fleet.SparePoolBroker`). When set, the
+               controller no longer assumes it owns every unassigned device:
+               before planning it asks ``broker.candidates(self)`` for the
+               spare names it may claim, and after applying an outcome it
+               reports ``broker.notify(self, claimed, freed)`` so concurrent
+               repairs on OTHER tenant shards cannot grab the same spare.
+               Without a broker, behavior is bit-identical to the
+               single-tenant controller of PRs 4-7.
     """
 
     def __init__(self, ir: PlanIR, *, server=None, injector=None,
                  seed: int = 0, force_full: bool = False,
-                 require_feasible: bool = True):
+                 require_feasible: bool = True, spare_broker=None):
         self.ir = ir.validate()
         self.server = server
         self.injector = injector
         self.seed = seed
         self.force_full = force_full
         self.require_feasible = require_feasible
+        self.spare_broker = spare_broker
         self.down: Set[str] = set()
         self.history: List[RepairOutcome] = []
         self._pending: Optional[Set[str]] = None
+        # assignment snapshot last reported to the broker — notify() sends
+        # set diffs, so this must track exactly what the broker believes
+        self._broker_view: Set[str] = self._assigned_names(self.ir)
 
     # -- event intake --------------------------------------------------------
 
@@ -155,7 +168,9 @@ class ClusterController:
         self.ir = self.ir.drop_device(name)
         self.down.discard(name)
         alive = self.ir.alive_mask(self.down)
-        self.ir, reenc, moved = self._reencode_shares(alive)
+        cand = self._spare_candidates()
+        self.ir, reenc, moved = self._reencode_shares(
+            alive, spare_candidates=cand)
         if self.ir.quorum(alive).all():
             # quorum intact, but the loss may still have pushed a surviving
             # group past the Eq. 1f outage target — report that honestly
@@ -177,9 +192,11 @@ class ClusterController:
 
     def _rebuild(self, alive: np.ndarray, reencoded: Tuple[int, ...] = (),
                  moved: Tuple[str, ...] = ()) -> RepairOutcome:
+        cand = self._spare_candidates()
         if not reencoded and (self.ir.coding is not None
                               or self.ir.compute_coding is not None):
-            self.ir, reencoded, moved = self._reencode_shares(alive)
+            self.ir, reencoded, moved = self._reencode_shares(
+                alive, spare_candidates=cand)
             if reencoded and self.ir.quorum(alive).all():
                 out = RepairOutcome(
                     kind="reencode", ir=self.ir,
@@ -194,9 +211,10 @@ class ClusterController:
                     reencoded_shares=reencoded)
                 self._apply(out)
                 return out
-        out = None if self.force_full else self.plan_repair(alive)
+        out = None if self.force_full else self.plan_repair(
+            alive, spare_candidates=cand)
         if out is None:
-            out = self.plan_full(alive)
+            out = self.plan_full(alive, spare_candidates=cand)
         # a full replan discards the coding layout (and with it any share
         # placement the re-encode pass made), so its outcome must not
         # report that re-encode work as applied
@@ -209,12 +227,16 @@ class ClusterController:
         self._apply(out)
         return out
 
-    def _reencode_shares(self, alive: np.ndarray
+    def _reencode_shares(self, alive: np.ndarray, *,
+                         spare_candidates: Optional[Set[str]] = None
                          ) -> Tuple[PlanIR, Tuple[int, ...],
                                     Tuple[str, ...]]:
         """Rebuild coded shares with no live placement by re-encoding onto
         live spare devices (unassigned, Eq. 1g memory respected, picked by
-        Eq. 1a latency of the share's student). Returns the (possibly
+        Eq. 1a latency of the share's student). ``spare_candidates``, when
+        given, is the explicit set of device names eligible as re-encode
+        targets (a fleet broker's free pool); None keeps the legacy "every
+        alive unassigned column is mine" behavior. Returns the (possibly
         unchanged) IR plus the rebuilt global share ids and donor names —
         no portion forward is re-jitted and no student re-distilled: the
         new device serves the same deterministic linear combination.
@@ -244,7 +266,9 @@ class ClusterController:
         used = member.any(axis=0)
         if pmember.size:
             used = used | pmember.any(axis=0)
-        spares = [int(n) for n in np.flatnonzero(alive & ~used)]
+        spares = [int(n) for n in np.flatnonzero(alive & ~used)
+                  if spare_candidates is None
+                  or ir.device_names[n] in spare_candidates]
         params = ir.student_caps[:, 1]
         c_mem = ir.device_caps[:, 1]
         reencoded: List[int] = []
@@ -321,18 +345,81 @@ class ClusterController:
         new_ir = ir.with_(**kw)
         return new_ir, tuple(reencoded), tuple(moved)
 
+    @staticmethod
+    def _assigned_names(ir: PlanIR) -> Set[str]:
+        """Device names holding any placement (replica, parity share, or
+        compute shard) in ``ir`` — the set a spare broker must treat as
+        claimed by this tenant."""
+        if not ir.N:
+            return set()
+        used = ir.member.any(axis=0)
+        if ir.coding is not None and ir.coding.P:
+            used = used | ir.coding.parity_member.any(axis=0)
+        return {ir.device_names[n] for n in np.flatnonzero(used)}
+
+    def _spare_candidates(self) -> Optional[Set[str]]:
+        """The spare names this shard may claim right now: None (= all
+        unassigned) without a broker; otherwise the broker's free set plus
+        this plan's own unassigned devices OUTSIDE the broker's pool
+        universe — the broker arbitrates only the shared pool, private
+        spares stay the tenant's business."""
+        if self.spare_broker is None:
+            return None
+        cand = set(self.spare_broker.candidates(self))
+        pool = set(getattr(self.spare_broker, "pool", ()))
+        return cand | (set(self.ir.device_names)
+                       - self._assigned_names(self.ir) - pool)
+
+    def apply_plan(self, new_ir: PlanIR, *, kind: str = "scale",
+                   mapping: Optional[Dict[int, int]] = None,
+                   moved: Sequence[str] = ()) -> RepairOutcome:
+        """Adopt an externally planned IR — the hook a fleet autoscaler uses
+        to grow or shrink this tenant's membership from the shared spare
+        pool. Migrates the attached server and settles the spare broker
+        exactly as an internally planned repair would (membership-only
+        changes keep every jitted portion forward)."""
+        new_ir = new_ir.validate()
+        if mapping is None:
+            mapping = {k: k for k in range(new_ir.K)}
+        alive = new_ir.alive_mask(self.down)
+        out = RepairOutcome(
+            kind=kind, ir=new_ir, mapping=mapping, touched_slots=(),
+            rejitted_slots=(), redeployed=len(tuple(moved)),
+            moved_devices=tuple(moved),
+            feasible=bool(new_ir.quorum(alive).all()),
+            objective=new_ir.objective(alive), wall_s=0.0)
+        self._apply(out)
+        return out
+
     def _apply(self, out: RepairOutcome) -> None:
         self.ir = out.ir
         if self.server is not None:
             self.server.migrate(out.ir, out.mapping)
         self.history.append(out)
+        if self.spare_broker is not None:
+            now_assigned = self._assigned_names(out.ir)
+            claimed = now_assigned - self._broker_view
+            # a name that vanished from the IR entirely (permanent loss)
+            # is dead, not freed — only still-present columns return to
+            # the pool
+            freed = ((self._broker_view - now_assigned)
+                     & set(out.ir.device_names))
+            if claimed or freed:
+                self.spare_broker.notify(self, claimed, freed)
+            self._broker_view = now_assigned
 
-    def plan_repair(self, alive: np.ndarray) -> Optional[RepairOutcome]:
+    def plan_repair(self, alive: np.ndarray, *,
+                    spare_candidates: Optional[Set[str]] = None
+                    ) -> Optional[RepairOutcome]:
         """Incremental local repair: fill quorum-less slots with spare donor
         devices via a residual Hungarian on the Eq. 1a matrix, warm-started
         from the current plan. Partitions (and therefore portion forwards)
         are untouched; only donor sources and repaired slots re-pick
-        students. Returns None when repair is infeasible."""
+        students. ``spare_candidates``, when given, is the explicit set of
+        unassigned device names this repair may claim (the legacy behavior
+        — None — recomputes "alive & unused" internally and assumes it owns
+        all of it, which is wrong the moment two shards repair
+        concurrently). Returns None when repair is infeasible."""
         t0 = time.perf_counter()
         ir = self.ir
         N = ir.N
@@ -379,7 +466,9 @@ class ClusterController:
         # stays within p_th after the donation (removing a replica can only
         # raise the outage product, so any subset of this prefix is safe too)
         donors: List[int] = [int(n) for n in dev_idx
-                             if alive[n] and not assigned[n]]
+                             if alive[n] and not assigned[n]
+                             and (spare_candidates is None
+                                  or ir.device_names[n] in spare_candidates)]
         p_out_all = ir.device_caps[:, 3]
         min_cost = cost.min(axis=0)
         cc = ir.compute_coding
@@ -491,13 +580,23 @@ class ClusterController:
             feasible=feasible, objective=new_ir.objective(alive),
             wall_s=time.perf_counter() - t0)
 
-    def plan_full(self, alive: np.ndarray) -> RepairOutcome:
+    def plan_full(self, alive: np.ndarray, *,
+                  spare_candidates: Optional[Set[str]] = None
+                  ) -> RepairOutcome:
         """Fallback: full Algorithm-1 replan (tune_d_th sweep) on the live
         fleet, embedded back onto the full device axis; distilled students
-        redeploy via one-to-one remap_students."""
+        redeploy via one-to-one remap_students. With ``spare_candidates``
+        set, unassigned devices outside the candidate set are excluded from
+        the replan fleet — a shard must not re-partition itself onto spares
+        another tenant holds."""
         t0 = time.perf_counter()
         ir = self.ir
-        devs = [d for i, d in enumerate(ir.devices()) if alive[i]]
+        assigned = ir.member.any(axis=0) if ir.N else np.zeros(0, bool)
+        if ir.coding is not None and ir.coding.P:
+            assigned = assigned | ir.coding.parity_member.any(axis=0)
+        devs = [d for i, d in enumerate(ir.devices())
+                if alive[i] and (spare_candidates is None or assigned[i]
+                                 or d.name in spare_candidates)]
         small = PL.tune_d_th_ir(devs, ir.A, ir.students(), p_th=ir.p_th,
                                 seed=self.seed) if devs else None
         if small is None or small.K == 0:

@@ -18,8 +18,10 @@ in-flight batch finishes on the jitted portions it was dispatched with,
 queued requests pick up the migrated plan (each request records the
 ``plan_epoch`` it was served under).
 
-Time is a virtual clock driven by an event heap, so runs are deterministic
-and arrival processes can be replayed exactly. The service time of a batch
+Time is a virtual clock driven by an event heap (the shared scheduler
+primitives in :mod:`repro.runtime.clock` — the multi-tenant fleet router
+runs on the same ones), so runs are deterministic and arrival processes
+can be replayed exactly. The service time of a batch
 is either the *measured wall-clock* of its ``serve_batch`` call (the real
 systems number — jit dispatch overhead and post-migration recompiles
 included) or a deterministic ``service_model`` ``(alpha, beta)`` →
@@ -34,7 +36,6 @@ instead of one per distinct row total.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
@@ -42,7 +43,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.simulator import FailureModel
+from repro.runtime.clock import EPS, CloseTimer, EventQueue, periodic_ticks
 from repro.runtime.serving import QuorumServer
+
+# event-kind vocabulary of the engine's virtual-clock loop (heap entries
+# are managed by repro.runtime.clock.EventQueue; ties resolve in push
+# order, so replays are exact)
+ARRIVE, CLOSE, DONE, CHAOS, SHARE = 0, 1, 2, 3, 4
 
 
 # ---------------------------------------------------------------------------
@@ -393,33 +400,25 @@ class ServingEngine:
         if self.cfg.warmup and self.cfg.service_model is None and records:
             self._warmup(sizes)
 
-        heap: List[Tuple[float, int, int, int]] = []
-        seq = 0
-        ARRIVE, CLOSE, DONE, CHAOS, SHARE = 0, 1, 2, 3, 4
+        events = EventQueue()
         for r in records:
-            heapq.heappush(heap, (r.t_arrival, seq, ARRIVE, r.rid))
-            seq += 1
+            events.push(r.t_arrival, ARRIVE, r.rid)
         if self.injector is not None and self.cfg.chaos_every:
             t_end = float(times.max()) if len(times) else 0.0
-            # tick times by index, not accumulation — summing float steps
-            # can overshoot t_end by an ulp and drop the final tick
-            n_ticks = int(np.floor(t_end / self.cfg.chaos_every + 1e-9))
-            for i in range(1, n_ticks + 1):
-                heapq.heappush(heap, (i * self.cfg.chaos_every, seq,
-                                      CHAOS, -1))
-                seq += 1
+            for t in periodic_ticks(self.cfg.chaos_every, t_end):
+                events.push(float(t), CHAOS, -1)
 
         queue: deque = deque()
         in_flight = 0
         bid = 0
-        timer_at = float("inf")
+        timer = CloseTimer(events, CLOSE)
         batches: List[BatchRecord] = []
 
         def due(now: float) -> bool:
             return bool(queue) and (
                 len(queue) >= self.cfg.max_batch
                 or now >= records[queue[0]].t_arrival
-                + self.cfg.max_wait - 1e-12)
+                + self.cfg.max_wait - EPS)
 
         def admit(now: float):
             """Admission control: drop queued requests that can no longer
@@ -432,48 +431,42 @@ class ServingEngine:
             pred = self.server.ir.objective()
             survivors = [rid for rid in queue
                          if now - records[rid].t_arrival + pred
-                         <= self.cfg.slo + 1e-12]
+                         <= self.cfg.slo + EPS]
             if len(survivors) != len(queue):
                 for rid in queue:
                     if now - records[rid].t_arrival + pred \
-                            > self.cfg.slo + 1e-12:
+                            > self.cfg.slo + EPS:
                         records[rid].rejected = True
                 queue.clear()
                 queue.extend(survivors)
 
         def try_dispatch(now: float):
-            nonlocal in_flight, bid, seq, timer_at
+            nonlocal in_flight, bid
             admit(now)
             while queue and in_flight < self.cfg.pipeline_depth and due(now):
                 take = [records[queue.popleft()]
                         for _ in range(min(len(queue), self.cfg.max_batch))]
                 done_t, batch, share_events = self._dispatch(now, take, bid)
                 batches.append(batch)
-                heapq.heappush(heap, (done_t, seq, DONE, bid))
-                seq += 1
+                events.push(done_t, DONE, bid)
                 for t_sh, fut_idx in share_events:
-                    heapq.heappush(heap, (t_sh, seq, SHARE, fut_idx))
-                    seq += 1
+                    events.push(t_sh, SHARE, fut_idx)
                 bid += 1
                 in_flight += 1
             # arm a close timer only while the head still needs to wait; a
             # head that is due but blocked on pipeline_depth is re-tried by
             # the DONE event (an overdue timer would spin the event loop)
             if queue and not due(now):
-                close_at = records[queue[0]].t_arrival + self.cfg.max_wait
-                if close_at < timer_at - 1e-12 or timer_at <= now:
-                    timer_at = close_at
-                    heapq.heappush(heap, (close_at, seq, CLOSE, -1))
-                    seq += 1
+                timer.arm(records[queue[0]].t_arrival + self.cfg.max_wait,
+                          now)
 
-        while heap:
-            now, _, kind, payload = heapq.heappop(heap)
+        while events:
+            now, kind, payload = events.pop()
             if kind == ARRIVE:
                 queue.append(payload)
                 try_dispatch(now)
             elif kind == CLOSE:
-                if timer_at <= now + 1e-12:
-                    timer_at = float("inf")
+                timer.fired(now)
                 try_dispatch(now)
             elif kind == DONE:
                 in_flight -= 1

@@ -1,0 +1,239 @@
+"""Virtual-clock scheduler primitives (runtime/clock.py).
+
+The engine's event loop was extracted into EventQueue/CloseTimer so the
+multi-tenant fleet router shares one scheduler implementation. These tests
+pin (a) the primitives' semantics and (b) fixed-seed BIT-identity of the
+refactored ServingEngine against a frozen copy of the pre-refactor raw
+-heapq loop. Part of the CI fast lane."""
+import dataclasses
+import heapq
+from collections import deque
+
+import numpy as np
+
+from repro.core.scenarios import MMPPArrivals, PoissonArrivals
+from repro.runtime.clock import EPS, CloseTimer, EventQueue, periodic_ticks
+from repro.runtime.controller import ClusterController
+from repro.runtime.engine import (EngineConfig, EngineReport, ServingEngine,
+                                  build_demo_server)
+from repro.runtime.failures import FailureInjector, markov_flap_schedule
+
+
+# -- primitives ---------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_push_order():
+    q = EventQueue()
+    q.push(2.0, 0, "late")
+    q.push(1.0, 0, "a")
+    q.push(1.0, 1, "b")          # same time: push order must win
+    q.push(0.5, 9, "first")
+    out = [q.pop() for _ in range(len(q))]
+    assert [p for _, _, p in out] == ["first", "a", "b", "late"]
+    assert not q
+
+
+def test_event_queue_matches_reference_heapq_on_random_program():
+    """Any push program pops identically to the raw (t, seq, kind, payload)
+    tuple heap the engine used before the extraction."""
+    rng = np.random.default_rng(0)
+    q = EventQueue()
+    heap, seq = [], 0
+    for i in range(500):
+        t = float(rng.choice([0.1, 0.5, 0.5, 1.0, rng.random()]))
+        kind = int(rng.integers(0, 5))
+        q.push(t, kind, i)
+        heapq.heappush(heap, (t, seq, kind, i))
+        seq += 1
+    while heap:
+        t, _, kind, payload = heapq.heappop(heap)
+        assert q.pop() == (t, kind, payload)
+    assert not q
+
+
+def test_close_timer_arm_once_semantics():
+    q = EventQueue()
+    timer = CloseTimer(q, kind=1)
+    timer.arm(1.0, now=0.0)
+    timer.arm(1.0, now=0.0)      # same deadline: no second event
+    timer.arm(2.0, now=0.0)      # later deadline: ignored
+    assert len(q) == 1
+    timer.arm(0.5, now=0.0)      # strictly earlier: re-armed
+    assert len(q) == 2 and timer.armed_at == 0.5
+    t, _, _ = q.pop()            # stale 1.0 event pops later; 0.5 first
+    timer.fired(t)
+    assert timer.armed_at == float("inf")
+    t, _, _ = q.pop()            # the superseded 1.0 event: a stale pop
+    timer.fired(t)               # must not raise, timer stays unarmed
+    assert timer.armed_at == float("inf")
+    timer.arm(3.0, now=2.5)      # fresh window after firing
+    assert timer.armed_at == 3.0
+
+
+def test_periodic_ticks_by_index_not_accumulation():
+    every = 0.1
+    t_end = 0.7000000000000001       # accumulation would drop tick 7
+    ticks = periodic_ticks(every, t_end)
+    assert len(ticks) == 7
+    assert np.allclose(ticks, every * np.arange(1, 8))
+    assert periodic_ticks(0.0, 1.0).size == 0
+    assert periodic_ticks(0.1, 0.0).size == 0
+
+
+# -- frozen pre-refactor engine loop ------------------------------------------
+
+class _LegacyLoopEngine(ServingEngine):
+    """ServingEngine with the PR-7 raw-heapq ``_run`` body, frozen verbatim
+    (modulo the extracted-state names) — the bit-identity oracle for the
+    clock.py refactor."""
+
+    def _run(self, times, sizes) -> EngineReport:
+        from repro.runtime.engine import RequestRecord, BatchRecord  # noqa: F401
+        times = np.asarray(times, np.float64)
+        if sizes is None:
+            sizes = np.ones(len(times), np.int64)
+        sizes = np.asarray(sizes, np.int64)
+        from repro.runtime.engine import RequestRecord
+        records = [RequestRecord(i, float(times[i]), int(sizes[i]))
+                   for i in range(len(times))]
+        if self.cfg.warmup and self.cfg.service_model is None and records:
+            self._warmup(sizes)
+
+        heap, seq = [], 0
+        ARRIVE, CLOSE, DONE, CHAOS, SHARE = 0, 1, 2, 3, 4
+        for r in records:
+            heapq.heappush(heap, (r.t_arrival, seq, ARRIVE, r.rid))
+            seq += 1
+        if self.injector is not None and self.cfg.chaos_every:
+            t_end = float(times.max()) if len(times) else 0.0
+            n_ticks = int(np.floor(t_end / self.cfg.chaos_every + 1e-9))
+            for i in range(1, n_ticks + 1):
+                heapq.heappush(heap, (i * self.cfg.chaos_every, seq,
+                                      CHAOS, -1))
+                seq += 1
+
+        queue = deque()
+        in_flight = 0
+        bid = 0
+        timer_at = float("inf")
+        batches = []
+
+        def due(now):
+            return bool(queue) and (
+                len(queue) >= self.cfg.max_batch
+                or now >= records[queue[0]].t_arrival
+                + self.cfg.max_wait - 1e-12)
+
+        def admit(now):
+            if not self.cfg.admission or not queue:
+                return
+            pred = self.server.ir.objective()
+            survivors = [rid for rid in queue
+                         if now - records[rid].t_arrival + pred
+                         <= self.cfg.slo + 1e-12]
+            if len(survivors) != len(queue):
+                for rid in queue:
+                    if now - records[rid].t_arrival + pred \
+                            > self.cfg.slo + 1e-12:
+                        records[rid].rejected = True
+                queue.clear()
+                queue.extend(survivors)
+
+        def try_dispatch(now):
+            nonlocal in_flight, bid, seq, timer_at
+            admit(now)
+            while queue and in_flight < self.cfg.pipeline_depth and due(now):
+                take = [records[queue.popleft()]
+                        for _ in range(min(len(queue), self.cfg.max_batch))]
+                done_t, batch, share_events = self._dispatch(now, take, bid)
+                batches.append(batch)
+                heapq.heappush(heap, (done_t, seq, DONE, bid))
+                seq += 1
+                for t_sh, fut_idx in share_events:
+                    heapq.heappush(heap, (t_sh, seq, SHARE, fut_idx))
+                    seq += 1
+                bid += 1
+                in_flight += 1
+            if queue and not due(now):
+                close_at = records[queue[0]].t_arrival + self.cfg.max_wait
+                if close_at < timer_at - 1e-12 or timer_at <= now:
+                    timer_at = close_at
+                    heapq.heappush(heap, (close_at, seq, CLOSE, -1))
+                    seq += 1
+
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
+            if kind == ARRIVE:
+                queue.append(payload)
+                try_dispatch(now)
+            elif kind == CLOSE:
+                if timer_at <= now + 1e-12:
+                    timer_at = float("inf")
+                try_dispatch(now)
+            elif kind == DONE:
+                in_flight -= 1
+                try_dispatch(now)
+            elif kind == SHARE:
+                fut = self.futures[payload]
+                if fut.arrived < fut.k:
+                    fut.arrived += 1
+                    if fut.arrived == fut.k:
+                        fut.t_complete = now
+                else:
+                    fut.cancelled += 1
+            else:
+                down = set(self.injector.tick())
+                if self.controller is not None:
+                    self.controller.observe_deferred(down)
+                else:
+                    self._down = down
+        return EngineReport(records, batches, self.migrations,
+                            self.cfg.slo, self.futures)
+
+
+def _reports_identical(a: EngineReport, b: EngineReport) -> None:
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert dataclasses.astuple(ra) == dataclasses.astuple(rb)
+    assert [dataclasses.astuple(x) for x in a.batches] \
+        == [dataclasses.astuple(x) for x in b.batches]
+    assert len(a.migrations) == len(b.migrations)
+    for (ta, oa), (tb, ob) in zip(a.migrations, b.migrations):
+        assert ta == tb and oa.kind == ob.kind \
+            and oa.moved_devices == ob.moved_devices
+
+
+def _engines(engine_cls, *, chaos: bool, seed: int):
+    from tests.test_engine import _toy_ir
+    ir = _toy_ir()
+    srv = build_demo_server(ir, feat=8, hidden=16, n_classes=3, seed=0)
+    cfg = EngineConfig(max_batch=8, max_wait=0.01, slo=0.2,
+                       service_model=(2e-3, 1e-4), input_dim=8, seed=seed,
+                       chaos_every=0.02 if chaos else None,
+                       pipeline_depth=2, admission=True)
+    ctl = injector = None
+    if chaos:
+        events = markov_flap_schedule(list(ir.device_names), 0.2, 0.5, 60,
+                                      np.random.default_rng(7))
+        injector = FailureInjector(events)
+        ctl = ClusterController(ir, server=srv, injector=injector, seed=0)
+    return engine_cls(srv, cfg, controller=ctl, injector=injector)
+
+
+def test_engine_bit_identical_to_frozen_prerefactor_loop():
+    """The clock.py port of ServingEngine._run reproduces the PR-7 raw
+    -heapq loop record for record — Poisson and bursty MMPP traces, with
+    and without live chaos/migration."""
+    for chaos in (False, True):
+        for gen, gseed in ((PoissonArrivals(400.0, (1, 2, 4),
+                                            (0.5, 0.3, 0.2)), 2),
+                           (MMPPArrivals(rates=(100.0, 1500.0),
+                                         dwell=(0.05, 0.02),
+                                         sizes=(1, 2)), 3)):
+            times, sizes = gen.generate(np.random.default_rng(gseed), 0.4)
+            new = _engines(ServingEngine, chaos=chaos, seed=0)
+            old = _engines(_LegacyLoopEngine, chaos=chaos, seed=0)
+            _reports_identical(new.run(times, sizes), old.run(times, sizes))
+
+
+def test_eps_matches_legacy_slack():
+    assert EPS == 1e-12

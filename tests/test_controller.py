@@ -275,3 +275,113 @@ def test_force_full_controller_only_full_replans():
     outs = ctl.run(25)
     assert outs and all(o.kind == "full_replan" for o in outs)
     assert isinstance(outs[0], RepairOutcome)
+
+
+# -- spare-pool broker: concurrent repairs must not share a spare -------------
+
+def _tenant_ir(prefix, spare_names, p_out=0.7, spare_p_out=0.1):
+    """Two-slot tenant plan (4 owned devices) plus shared, UNASSIGNED spare
+    columns. Member p_out is chosen so a healthy group cannot donate (one
+    remaining replica would breach Eq. 1f), forcing repairs onto spares."""
+    from repro.core.plan_ir import device_matrix, eq1a_latency, student_matrix
+    devs = [Device(f"{prefix}-a", 1e7, 2e6, 500, p_out),
+            Device(f"{prefix}-b", 2e7, 2e6, 500, p_out),
+            Device(f"{prefix}-c", 1e7, 2e6, 500, p_out),
+            Device(f"{prefix}-d", 3e7, 2e6, 500, p_out)] + \
+           [Device(s, 3e7, 2e6, 500, spare_p_out) for s in spare_names]
+    names, dcaps = device_matrix(devs)
+    snames, scaps = student_matrix(
+        [StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)])
+    N = len(devs)
+    member = np.zeros((2, N), bool)
+    member[0, 0] = member[0, 1] = True
+    member[1, 2] = member[1, 3] = True
+    M = 8
+    part = np.zeros((2, M), bool)
+    part[0, :4] = True
+    part[1, 4:] = True
+    return PlanIR(names, dcaps, snames, scaps, member, part,
+                  np.zeros(2, np.int64), np.arange(2, dtype=np.int64),
+                  eq1a_latency(scaps, dcaps), np.zeros((M, M)), 1.0, 0.5)
+
+
+class _Broker:
+    """Minimal duck-typed spare-pool arbiter (the real one lives in
+    runtime/fleet.py): candidates() is the free pool, notify() settles
+    claims and enforces cross-tenant exclusivity."""
+
+    def __init__(self, free):
+        self.pool = set(free)       # the pool universe: shared spares only
+        self.free = set(free)
+        self.log = []
+
+    def candidates(self, shard):
+        return set(self.free)
+
+    def notify(self, shard, claimed, freed):
+        # tenant-owned devices churn through repairs too; only names in the
+        # shared pool universe are the broker's business
+        claimed, freed = claimed & self.pool, freed & self.pool
+        assert claimed <= self.free, f"double-claimed {claimed - self.free}"
+        self.free -= claimed
+        self.free |= freed
+        self.log.append((claimed, set(freed)))
+
+
+def test_plan_repair_explicit_candidate_set():
+    """Spare selection honors the explicit candidate parameter instead of
+    recomputing 'alive & unused' internally."""
+    ir = _tenant_ir("t", ["spare-0"])
+    ctl = ClusterController(ir, seed=0)
+    alive = ir.alive_mask({"t-a", "t-b"})
+    out = ctl.plan_repair(alive, spare_candidates={"spare-0"})
+    assert out is not None and out.moved_devices == ("spare-0",)
+    # an empty candidate set must NOT invent a donor from the same column
+    assert ctl.plan_repair(alive, spare_candidates=set()) is None
+
+
+def test_concurrent_repairs_contend_for_one_spare():
+    """Regression: two tenant shards repairing at the same tick both used to
+    see the shared spare as 'alive & unused' and both claimed it. Through
+    the broker, exactly one wins; the loser must not touch the spare."""
+    broker = _Broker({"spare-0"})
+    ir_a = _tenant_ir("ta", ["spare-0"])
+    ir_b = _tenant_ir("tb", ["spare-0"])
+    ctl_a = ClusterController(ir_a, seed=0, spare_broker=broker)
+    ctl_b = ClusterController(ir_b, seed=0, spare_broker=broker,
+                              require_feasible=False)
+
+    # without a broker each shard would grab the spare for itself
+    solo = ClusterController(ir_b, seed=0)
+    solo_out = solo.observe({"tb-a", "tb-b"})
+    assert solo_out is not None and "spare-0" in solo_out.moved_devices
+
+    out_a = ctl_a.observe({"ta-a", "ta-b"})
+    assert out_a.kind == "repair" and "spare-0" in out_a.moved_devices
+    assert broker.free == set()                 # claim settled immediately
+
+    out_b = ctl_b.observe({"tb-a", "tb-b"})     # same spare, one tick later
+    assert "spare-0" not in ClusterController._assigned_names(ctl_b.ir)
+    assert "spare-0" not in (out_b.moved_devices if out_b else ())
+    # winner keeps it; broker state still exclusive
+    assert "spare-0" in ClusterController._assigned_names(ctl_a.ir)
+    assert broker.free == set()
+
+
+def test_apply_plan_releases_spares_back_to_broker():
+    """apply_plan (the autoscaler hook) settles the broker symmetrically:
+    dropping a claimed spare from the membership frees it for others."""
+    broker = _Broker({"spare-0"})
+    ir = _tenant_ir("t", ["spare-0"])
+    ctl = ClusterController(ir, seed=0, spare_broker=broker)
+    out = ctl.observe({"t-a", "t-b"})
+    assert "spare-0" in out.moved_devices and broker.free == set()
+    # scale back down: clear the spare's column and re-adopt the plan
+    member = np.array(ctl.ir.member)
+    col = list(ctl.ir.device_names).index("spare-0")
+    member[:, col] = False
+    member[0, list(ctl.ir.device_names).index("t-a")] = True  # heal original
+    scaled = ctl.ir.with_(member=member)
+    res = ctl.apply_plan(scaled, kind="scale_down")
+    assert res.kind == "scale_down"
+    assert broker.free == {"spare-0"}

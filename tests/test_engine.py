@@ -357,3 +357,37 @@ def test_admission_consumes_measured_latency():
     base = ServingEngine(_server(ir), cfg).run(np.zeros(12)).summary()
     shed = ServingEngine(_server(ir_slow), cfg).run(np.zeros(12)).summary()
     assert shed["rejected"] > base["rejected"]
+
+
+# -- degenerate percentile math (empty / single-request tenants) --------------
+
+def test_engine_report_summary_empty_tenant():
+    """A tenant that saw zero requests (or completed none) must summarize
+    without raising or emitting NaN — fleet aggregation folds these in."""
+    from repro.runtime.engine import EngineReport, RequestRecord
+    for report in (EngineReport([], [], [], slo=0.5),
+                   EngineReport([RequestRecord(0, 0.0, 1, rejected=True)],
+                                [], [], slo=0.5)):
+        assert report.latencies().shape == (0,)
+        s = report.summary()
+        assert s["n"] == 0 and s["throughput"] == 0.0
+        assert s["p50"] == float("inf") and s["p99"] == float("inf")
+        assert not any(isinstance(v, float) and np.isnan(v)
+                       for v in s.values())
+
+
+def test_engine_report_summary_single_request():
+    """p50/p99 of a one-request tenant are that request's latency — never
+    NaN, never an interpolation artifact."""
+    from repro.runtime.engine import EngineReport, RequestRecord
+    r = RequestRecord(0, 1.0, 1, t_dispatch=1.01, t_done=1.05,
+                      quorum_ok=True)
+    s = EngineReport([r], [], [], slo=0.5).summary()
+    assert s["n"] == 1
+    assert s["p50"] == pytest.approx(r.latency)
+    assert s["p99"] == pytest.approx(r.latency)
+    assert s["slo_attainment"] == 1.0
+    assert not any(isinstance(v, float) and np.isnan(v)
+                   for v in s.values())
+    # throughput guards its zero-width time window instead of dividing by 0
+    assert np.isfinite(s["throughput"])

@@ -1,0 +1,247 @@
+"""Hierarchical fleet control plane (runtime/fleet.py): single-tenant
+bit-identity through the refactored stack, spare-pool exclusivity under
+cross-tenant repair contention, backlog-driven autoscaling, and the
+router's dispatch policies. All seeded — part of the CI fast lane."""
+import numpy as np
+import pytest
+
+from repro.core.plan_ir import PlanIR, device_matrix, eq1a_latency, student_matrix
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.scenarios import MMPPArrivals, PoissonArrivals
+from repro.runtime.controller import ClusterController
+from repro.runtime.engine import (EngineConfig, EngineReport, ServingEngine,
+                                  build_demo_server)
+from repro.runtime.failures import (FailureEvent, FailureInjector,
+                                    markov_flap_schedule)
+from repro.runtime.fleet import (Autoscaler, AutoscalerConfig, FleetController,
+                                 FleetEngine, FleetReport, FleetRouter,
+                                 SLOClass, SparePoolBroker, TenantSpec)
+from tests.test_clock import _reports_identical
+from tests.test_engine import _toy_ir
+
+
+def _tenant_ir(prefix, spare_devs=(), p_out=0.3):
+    """Two-slot, four-device tenant plan, optionally widened with shared
+    spare columns (unassigned)."""
+    devs = [Device(f"{prefix}-a", 1e7, 2e6, 500, p_out),
+            Device(f"{prefix}-b", 2e7, 2e6, 500, p_out),
+            Device(f"{prefix}-c", 1e7, 2e6, 500, p_out),
+            Device(f"{prefix}-d", 3e7, 2e6, 500, p_out)]
+    names, dcaps = device_matrix(devs)
+    snames, scaps = student_matrix(
+        [StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)])
+    member = np.array([[1, 1, 0, 0], [0, 0, 1, 1]], bool)
+    M = 8
+    part = np.zeros((2, M), bool)
+    part[0, :4] = True
+    part[1, 4:] = True
+    ir = PlanIR(names, dcaps, snames, scaps, member, part,
+                np.zeros(2, np.int64), np.arange(2, dtype=np.int64),
+                eq1a_latency(scaps, dcaps), np.zeros((M, M)), 1.0, 0.5)
+    if spare_devs:
+        ir = ir.add_devices(list(spare_devs))
+    return ir
+
+
+def _spare(name, p_out=0.05):
+    return Device(name, 4e7, 4e6, 800, p_out)
+
+
+def _server(ir):
+    return build_demo_server(ir, feat=8, hidden=16, n_classes=3, seed=0)
+
+
+def _cfg(**kw):
+    base = dict(max_batch=8, max_wait=0.01, slo=0.2,
+                service_model=(2e-3, 1e-4), input_dim=8, seed=0,
+                pipeline_depth=2, admission=True)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# -- single-tenant bit-identity -----------------------------------------------
+
+def _engine_pair(chaos):
+    """Independently built (ServingEngine, FleetEngine-with-one-tenant)
+    sharing every seed."""
+    def build():
+        ir = _toy_ir()
+        srv = build_demo_server(ir, feat=8, hidden=16, n_classes=3, seed=0)
+        cfg = _cfg(chaos_every=0.02 if chaos else None)
+        ctl = injector = None
+        if chaos:
+            events = markov_flap_schedule(list(ir.device_names), 0.2, 0.5,
+                                          60, np.random.default_rng(7))
+            injector = FailureInjector(events)
+            ctl = ClusterController(ir, server=srv, injector=injector,
+                                    seed=0)
+        return srv, ctl, injector, cfg
+    srv, ctl, injector, cfg = build()
+    engine = ServingEngine(srv, cfg, controller=ctl, injector=injector)
+    srv2, ctl2, injector2, cfg2 = build()
+    tenant = TenantSpec("solo", srv2, controller=ctl2,
+                        slo=SLOClass("solo", slo=cfg2.slo), config=cfg2)
+    fleet = FleetEngine([tenant], injector=injector2,
+                        chaos_every=cfg2.chaos_every, seed=0)
+    return engine, fleet
+
+
+@pytest.mark.parametrize("chaos", [False, True])
+def test_single_tenant_fleet_bit_identical_to_engine(chaos):
+    """A one-tenant fleet reproduces ServingEngine.run record for record —
+    the refactor's contract for the PR-7 single-tenant stack."""
+    for gen, gseed in ((PoissonArrivals(400.0, (1, 2, 4),
+                                        (0.5, 0.3, 0.2)), 2),
+                       (MMPPArrivals(rates=(100.0, 1500.0),
+                                     dwell=(0.05, 0.02), sizes=(1, 2)), 3)):
+        times, sizes = gen.generate(np.random.default_rng(gseed), 0.4)
+        engine, fleet = _engine_pair(chaos)
+        a = engine.run(times, sizes)
+        b = fleet.run([(times, sizes)]).reports[0]
+        _reports_identical(a, b)
+
+
+# -- spare-pool exclusivity under contention ----------------------------------
+
+def test_cross_tenant_repairs_share_the_pool_exclusively():
+    """Two tenants lose a whole group at the same chaos tick; their repairs
+    compete for one shared spare. Exactly one wins it, the other repairs
+    from its private spare — and the broker would have raised on any
+    double-claim."""
+    spare = _spare("spare-0")
+    # members' p_out 0.7 > p_th 0.5: healthy groups cannot donate, so
+    # repairs MUST come from spare columns
+    ir_a = _tenant_ir("ta", [spare], p_out=0.7)
+    ir_b = _tenant_ir("tb", [spare, _spare("tb-priv")], p_out=0.7)
+    srv_a, srv_b = _server(ir_a), _server(ir_b)
+    ctl_a = ClusterController(ir_a, server=srv_a, seed=0)
+    ctl_b = ClusterController(ir_b, server=srv_b, seed=0,
+                              require_feasible=False)
+    tenants = [
+        TenantSpec("ta", srv_a, controller=ctl_a,
+                   slo=SLOClass("gold", slo=0.2, weight=4.0),
+                   config=_cfg(admission=False)),
+        TenantSpec("tb", srv_b, controller=ctl_b,
+                   slo=SLOClass("bronze", slo=0.2, weight=1.0),
+                   config=_cfg(admission=False)),
+    ]
+    fc = FleetController(tenants, ["spare-0"])
+    # tick 1 (the first chaos event) kills group 0 of BOTH tenants
+    injector = FailureInjector([
+        FailureEvent(0, d) for d in ("ta-a", "ta-b", "tb-a", "tb-b")])
+    fleet = FleetEngine(tenants, fleet_controller=fc, injector=injector,
+                        chaos_every=0.02, seed=0)
+    # tenant A's arrivals lead, so its repair polls (and claims) first
+    t_a = np.arange(0.03, 0.4, 0.005)
+    t_b = np.arange(0.032, 0.4, 0.005)
+    report = fleet.run([(t_a, None), (t_b, None)])
+    assert fc.broker.owner.get("spare-0") is ctl_a
+    assert "spare-0" in ClusterController._assigned_names(ctl_a.ir)
+    assert "spare-0" not in ClusterController._assigned_names(ctl_b.ir)
+    # the loser still repaired — off its private spare
+    assert "tb-priv" in ClusterController._assigned_names(ctl_b.ir)
+    assert ctl_a.ir.quorum(ctl_a.ir.alive_mask(ctl_a.down)).all()
+    assert ctl_b.ir.quorum(ctl_b.ir.alive_mask(ctl_b.down)).all()
+    # both tenants kept serving through the contention
+    for rep in report.reports:
+        assert rep.summary()["n"] > 0
+
+
+def test_broker_raises_on_double_claim():
+    broker = SparePoolBroker(["s0"])
+    a, b = object(), object()
+    broker.notify(a, {"s0"}, set())
+    with pytest.raises(RuntimeError, match="double-claimed"):
+        broker.notify(b, {"s0"}, set())
+    broker.notify(a, set(), {"s0"})      # owner frees; now b may claim
+    broker.notify(b, {"s0"}, set())
+    assert broker.owner["s0"] is b
+
+
+# -- autoscaler ---------------------------------------------------------------
+
+def test_autoscaler_adopts_under_burst_and_releases_when_idle():
+    """A backlogged tenant adopts the best free spare into its slowest slot
+    (service model speeds up), then returns it to the pool once idle."""
+    ir = _tenant_ir("t", [_spare("spare-0"), _spare("spare-1")])
+    srv = _server(ir)
+    ctl = ClusterController(ir, server=srv, seed=0)
+    tenant = TenantSpec(
+        "t", srv, controller=ctl, slo=SLOClass("gold", slo=0.3, weight=2.0),
+        config=_cfg(service_model=None, warmup=False, max_batch=4,
+                    pipeline_depth=1, admission=False),
+        service_coeffs=(1e-3, 0.01, 0.002))
+    fc = FleetController([tenant], ["spare-0", "spare-1"])
+    scaler = Autoscaler(AutoscalerConfig(every=0.02, grow_backlog=6,
+                                         shrink_idle=0.1, cooldown=0.05))
+    fleet = FleetEngine([tenant], fleet_controller=fc, autoscaler=scaler,
+                        seed=0)
+    obj0 = float(ctl.ir.objective())
+    # a hard burst, then silence, then one straggler to keep ticks flowing
+    burst = np.sort(np.random.default_rng(0).uniform(0.0, 0.05, 40))
+    times = np.concatenate([burst, [0.9, 1.0]])
+    report = fleet.run([(times, None)])
+    kinds = [a[2] for a in scaler.actions]
+    assert "scale_up" in kinds, "burst backlog never triggered adoption"
+    assert "scale_down" in kinds, "idle tenant never released its spare"
+    # the pool is whole again and the plan is back to its own devices
+    assert fc.broker.free == {"spare-0", "spare-1"}
+    assert float(ctl.ir.objective()) == pytest.approx(obj0)
+    up = [a for a in scaler.actions if a[2] == "scale_up"][0]
+    down = [a for a in scaler.actions if a[2] == "scale_down"][0]
+    assert up[0] < down[0]
+    # adoption was recorded as a live migration on the lane
+    assert any(out.kind == "scale_up" for _, out in report.reports[0]
+               .migrations)
+    assert report.reports[0].summary()["n"] == len(times)
+
+
+# -- router policies ----------------------------------------------------------
+
+def _two_tenant_fleet(policy):
+    specs = []
+    for i, (name, slo) in enumerate((("gold", SLOClass("gold", 0.06, 4.0)),
+                                     ("bulk", SLOClass("bulk", 0.5, 1.0)))):
+        ir = _tenant_ir(name)
+        srv = _server(ir)
+        specs.append(TenantSpec(name, srv, slo=slo,
+                                config=_cfg(admission=False,
+                                            pipeline_depth=1,
+                                            max_batch=4)))
+    fleet = FleetEngine(specs, router=FleetRouter(policy), capacity=1,
+                        seed=0)
+    times = PoissonArrivals(300.0).generate(np.random.default_rng(5), 0.5)[0]
+    return fleet.run([(times, None), (times, None)])
+
+
+def test_predicted_router_protects_tight_slo_tenant():
+    """Under a shared capacity bottleneck, SLO-aware dispatch must serve
+    the tight-SLO tenant no worse than load-only JSQ does."""
+    jsq = _two_tenant_fleet("jsq")
+    pred = _two_tenant_fleet("predicted")
+    p99_jsq = jsq.tenant("gold").summary()["p99"]
+    p99_pred = pred.tenant("gold").summary()["p99"]
+    assert p99_pred <= p99_jsq + 1e-12
+    # both runs are deterministic end to end
+    again = _two_tenant_fleet("predicted")
+    for a, b in zip(pred.reports, again.reports):
+        _reports_identical(a, b)
+
+
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="unknown router policy"):
+        _two_tenant_fleet("round-robin")
+
+
+def test_fleet_report_summary_aggregates():
+    rep = _two_tenant_fleet("predicted")
+    s = rep.summary()
+    assert s["tenants"] == 2
+    assert s["completed"] == sum(r.summary()["n"] for r in rep.reports)
+    assert s["aggregate_rps"] > 0
+    assert len(s["p99_per_tenant"]) == 2
+    assert s["worst_p99"] == max(s["p99_per_tenant"])
+    with pytest.raises(ValueError):
+        FleetEngine([TenantSpec("x", _server(_tenant_ir("x")))],
+                    autoscaler=Autoscaler())

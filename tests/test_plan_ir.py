@@ -228,3 +228,67 @@ def test_plan_ir_drop_device():
     assert out.member.shape == (ir.K, ir.N - 1)
     assert out.latency_nd.shape == (ir.S, ir.N - 1)
     assert ir.drop_device("nonexistent") is ir
+
+
+def test_plan_ir_add_devices_unassigned_columns():
+    from repro.core.grouping import Device
+    A = _graph(8)
+    S = _students()
+    fleet = SIM.make_fleet(6, seed=1)
+    ir = PL.make_plan_ir(fleet, A, S, d_th=10.0, p_th=0.3)
+    spares = [Device("sp-0", 4e7, 4e6, 800, 0.1),
+              Device("sp-1", 2e7, 2e6, 400, 0.2)]
+    out = ir.add_devices(spares)
+    assert out.N == ir.N + 2
+    assert out.device_names[-2:] == ("sp-0", "sp-1")
+    # new columns are pure spares: no membership anywhere
+    assert not out.member[:, ir.N:].any()
+    np.testing.assert_array_equal(out.member[:, :ir.N], ir.member)
+    # latency columns match a from-scratch Eq. 1a on the widened catalogue
+    from repro.core.plan_ir import eq1a_latency
+    np.testing.assert_allclose(out.latency_nd,
+                               eq1a_latency(out.student_caps,
+                                            out.device_caps))
+    # the plan itself is untouched: same objective, still valid
+    assert out.validate().objective() == ir.objective()
+    # idempotent re-offer of the same pool
+    assert out.add_devices(spares) is out
+
+
+def test_plan_ir_add_devices_measured_specs():
+    from repro.core.grouping import Device
+    from repro.core.hwspec import DeviceSpec
+    A = _graph(8)
+    S = _students()
+    fleet = SIM.make_fleet(6, seed=1)
+    ir = PL.make_plan_ir(fleet, A, S, d_th=10.0, p_th=0.3)
+    ir = ir.with_measured_latency(
+        [DeviceSpec.from_declared(d) for d in ir.devices()])
+    sp = Device("sp-0", 4e7, 4e6, 800, 0.1)
+    spec = DeviceSpec("sp-0", 5e7, 900.0, 1e-4)
+    out = ir.add_devices([sp], specs=[spec])
+    assert out.device_specs is not None and len(out.device_specs) == out.N
+    assert out.device_specs[-1] is spec
+    out.validate()          # latency_nd must agree with the attached specs
+    # missing spec falls back to the declared view of the new device
+    out2 = ir.add_devices([sp])
+    assert out2.device_specs[-1].source == "declared"
+    out2.validate()
+
+
+def test_plan_ir_fleet_slice_tenant_view():
+    A = _graph(8)
+    S = _students()
+    fleet = SIM.make_fleet(8, seed=3)
+    ir = PL.make_plan_ir(fleet, A, S, d_th=10.0, p_th=0.3)
+    assigned = [ir.device_names[n]
+                for n in np.flatnonzero(ir.member.any(axis=0))]
+    out = ir.fleet_slice(assigned)
+    assert set(out.device_names) == set(assigned)
+    # fleet column order is preserved and the sliced plan stands alone
+    assert list(out.device_names) == [n for n in ir.device_names
+                                      if n in set(assigned)]
+    assert out.quorum().all()
+    assert out.objective() == ir.objective()
+    with pytest.raises(KeyError):
+        ir.fleet_slice(["nope"])
