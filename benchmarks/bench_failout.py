@@ -1,0 +1,88 @@
+"""Failout vs failure-blind at EQUAL deployed compute (fig5/fig6-style
+accuracy-under-failure curves).
+
+Both arms branch off the SAME cached base ensemble and run the SAME number
+of joint fine-tune steps through the identical code path — the blind arm is
+``FailoutConfig(max_losses=0)`` (P = 1, all-alive only), the failout arm
+trains under every ≤r-loss aliveness pattern. The CSV then reports accuracy
+per loss pattern for both arms, the all-alive delta (must be noise-level),
+and the planner demo: the failout arm's measured robustness curve feeds
+``thin_replicas``, which drops replicas while the plan-level loss tail
+stays within the survivability target the replicated plan was built for."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUDGET, BATCH, cached_ensemble, cached_teacher, emit
+
+FINETUNE_STEPS = {"cpu": 25, "full": 400}[BUDGET]
+MAX_LOSSES = 2
+# robustness-curve tolerance for the planner demo: the cpu smoke budget
+# cannot train to the full-budget <2% worst-case drop, so the smoke uses a
+# correspondingly laxer accuracy budget — the contract being exercised
+# (curve → tolerated ℓ → thin while P(>ℓ losses) ≤ p_th) is identical
+MAX_ACC_DROP = {"cpu": 0.30, "full": 0.02}[BUDGET]
+
+
+def main() -> None:
+    import jax  # noqa: F401  (forces backend init before timing)
+
+    from benchmarks.common import _image_task
+    from repro.core import failout as FO
+    from repro.core.pipeline import failout_finetune
+    from repro.core.planner import plan_loss_tail, thin_replicas
+
+    data = _image_task(10)
+    base = cached_ensemble("rocoin", p_th=0.25, success_prob=0.7, n_devices=8)
+    teacher = cached_teacher(10, 10, 2, 0)
+    K = len(base.students)
+    r = min(MAX_LOSSES, max(K - 1, 1))
+
+    arms = {}
+    for arm, losses in (("blind", 0), ("failout", r)):
+        cfg = FO.FailoutConfig(max_losses=losses, seed=5,
+                               steps=FINETUNE_STEPS)
+        arms[arm] = failout_finetune(base, teacher, cfg, batch=BATCH)
+
+    def acc(ens, mask=None):
+        return ens.accuracy(data, arrived=mask, batches=1, batch=256,
+                            seed0=40_000)
+
+    alive = {a: acc(e) for a, e in arms.items()}
+    emit("bench_failout/all_alive", 0.0,
+         f"acc_base={acc(base):.3f};acc_blind={alive['blind']:.3f};"
+         f"acc_failout={alive['failout']:.3f};"
+         f"delta={alive['failout'] - alive['blind']:+.3f}")
+
+    patterns = FO.enumerate_loss_patterns(K, r)[1:]     # 1..r-loss only
+    wins = 0
+    gains = []
+    for m in patterns:
+        lost = ",".join(str(i) for i in np.flatnonzero(~m))
+        ab = acc(arms["blind"], m)
+        af = acc(arms["failout"], m)
+        gains.append(af - ab)
+        wins += af >= ab
+        emit(f"bench_failout/lost[{lost}]", 0.0,
+             f"acc_blind={ab:.3f};acc_failout={af:.3f};gain={af - ab:+.3f}")
+    emit("bench_failout/summary", 0.0,
+         f"patterns={len(patterns)};failout_wins={wins};"
+         f"mean_gain={float(np.mean(gains)):+.3f}")
+
+    # planner demo: the measured curve lets the planner ship fewer replicas
+    ens = arms["failout"]
+    curve = ens.robustness_curve(data, max_losses=r, batches=1, batch=256)
+    for l in range(len(curve.losses)):
+        emit(f"bench_failout/curve/losses{int(curve.losses[l])}", 0.0,
+             f"mean={curve.accuracy[l]:.3f};worst={curve.worst[l]:.3f}")
+    tol = curve.tolerated(MAX_ACC_DROP)
+    ir = ens.ir
+    thin = thin_replicas(ir, curve, max_acc_drop=MAX_ACC_DROP)
+    emit("bench_failout/planner", 0.0,
+         f"tolerated={tol};replicas_before={int(ir.member.sum())};"
+         f"replicas_after={int(thin.member.sum())};"
+         f"loss_tail={plan_loss_tail(thin, tol):.4f};p_th={ir.p_th}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.bench_fleet",          # multi-tenant fleet: shared spare pool
     "benchmarks.bench_coding",         # replicate-K vs coded-(n,k) redundancy
     "benchmarks.bench_coded_compute",  # first-k compute shards vs stragglers
+    "benchmarks.bench_failout",        # failout vs failure-blind distillation
     "benchmarks.fig4_redundancy",      # planner only
     "benchmarks.fig7_heterogeneity",   # planner + simulator
     "benchmarks.fig3_latency",         # simulator + one trained ensemble

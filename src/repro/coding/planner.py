@@ -53,7 +53,9 @@ def select_redundancy(ir: PlanIR, *, code_k: int = 4,
                       max_parity: int = 3,
                       min_group: int = 2,
                       construction: str = "vandermonde",
-                      mode: str = "output") -> PlanIR:
+                      mode: str = "output",
+                      robustness=None,
+                      max_acc_drop: float = 0.01) -> PlanIR:
     """Mode-selection pass: convert replicated groups to coded-(n, k) where
     coding meets the replicated survivability target at lower deployed
     compute. Returns a new :class:`PlanIR` (possibly the input unchanged
@@ -78,9 +80,26 @@ def select_redundancy(ir: PlanIR, *, code_k: int = 4,
                ``r`` pre-encoded parity shards, one per member device, and
                the slot completes on the first ``code_k`` shard arrivals
                (:class:`~repro.coding.compute.ComputeCodingSpec`).
+    robustness: a measured :class:`~repro.core.failout.RobustnessCurve`
+               (accuracy vs #slot losses, exported per trained ensemble).
+               When given, replicas the trained-in robustness makes
+               redundant are thinned FIRST
+               (:func:`repro.core.planner.thin_replicas`, tolerance
+               ``max_acc_drop``): a failout-trained ensemble tolerating ℓ
+               losses at ≤ ``max_acc_drop`` accuracy drop drops up to one
+               replica per group while the plan-level loss tail
+               P(> ℓ slot misses) stays within ``p_th`` — and the freed
+               devices enlarge the spare pool the parity placement below
+               draws from. ``mode="replicate"`` stops after thinning
+               (no coding pass).
     """
     if ir.coding is not None or ir.compute_coding is not None:
         raise ValueError("plan already carries a coding spec")
+    if robustness is not None:
+        from repro.core.planner import thin_replicas
+        ir = thin_replicas(ir, robustness, max_acc_drop=max_acc_drop)
+    if mode == "replicate":
+        return ir
     if mode == "compute":
         return _select_compute(ir, code_k=code_k, parity=parity,
                                max_parity=max_parity,

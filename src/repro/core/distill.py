@@ -70,25 +70,77 @@ def distill_loss(student_logits: jnp.ndarray, student_feats: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def aggregate_portions(portions: Sequence[Optional[jnp.ndarray]],
-                       part_dims: Sequence[int]) -> jnp.ndarray:
+                       part_dims: Sequence[int], *,
+                       batch: Optional[int] = None) -> jnp.ndarray:
     """Concatenate per-partition feature portions; missing (failed) portions
     are zeroed — the paper's §V emulation of local failures.
 
     portions[k]: (B, part_dims[k]) or None. Returns (B, Σ dims).
+
+    The all-portions-missing pattern (beyond quorum distance) is DEFINED
+    when ``batch`` supplies the row count the portions can no longer
+    provide: the result is the all-zero feature matrix, so the FC head
+    emits its bias — a constant uniform-prior answer instead of an
+    exception (or a 0/0 on any normalized-merge variant). Without a
+    ``batch`` hint the row count is unrecoverable and the pattern raises.
     """
     outs = []
-    B = None
+    B = batch
     for p in portions:
         if p is not None:
             B = p.shape[0]
             break
     if B is None:
-        raise ValueError("no portion arrived — inference failed")
+        raise ValueError("no portion arrived and no batch hint — "
+                         "inference failed")
     for k, dim in enumerate(part_dims):
         p = portions[k]
         outs.append(jnp.zeros((B, dim), jnp.float32) if p is None
                     else p.astype(jnp.float32))
     return jnp.concatenate(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# failout: the quorum-merged objective under sampled aliveness masks
+# ---------------------------------------------------------------------------
+
+def expand_slot_masks(masks: np.ndarray,
+                      part_dims: Sequence[int]) -> np.ndarray:
+    """Expand (P, K) slot-aliveness masks to (P, Σ dims) feature-column
+    masks — column-space twin of :func:`aggregate_portions`' zeroing, so
+    ``feats_cat * col_mask`` is exactly the merged feature matrix the
+    serving path would build under that pattern."""
+    masks = np.asarray(masks, bool)
+    dims = np.asarray(list(part_dims), np.int64)
+    if masks.ndim != 2 or masks.shape[1] != len(dims):
+        raise ValueError(f"masks {masks.shape} do not match "
+                         f"{len(dims)} partitions")
+    return np.repeat(masks, dims, axis=1).astype(np.float32)
+
+
+def failout_merged_loss(fc: Dict[str, jnp.ndarray], feats_cat: jnp.ndarray,
+                        teacher_logits: jnp.ndarray, labels: jnp.ndarray,
+                        col_masks: jnp.ndarray, weights: jnp.ndarray,
+                        cfg: DistillConfig) -> jnp.ndarray:
+    """Failout objective: the quorum-merged KD loss under P aliveness
+    patterns, vmapped over the leading pattern axis in ONE compiled step.
+
+    ``feats_cat`` (B, ΣDk) are the concatenated student portions (computed
+    once per step — masking is a multiply, so patterns share the forward),
+    ``col_masks`` (P, ΣDk) the expanded patterns
+    (:func:`expand_slot_masks`), ``weights`` (P,) the pattern weights
+    (all-alive first — see :class:`repro.core.failout.FailoutSampler`).
+    Each pattern's merged prediction ``fc(feats ∘ mask)`` is scored with
+    the same Eq. 6 KD loss as failure-free distillation; the weighted sum
+    makes accuracy-under-failure a *training* objective."""
+    f32 = feats_cat.astype(jnp.float32)
+
+    def one(cm):
+        logits = fc_head_apply(fc, f32 * cm[None, :])
+        return kd_loss(logits, teacher_logits, labels, cfg)
+
+    losses = jax.vmap(one)(jnp.asarray(col_masks, jnp.float32))
+    return jnp.sum(jnp.asarray(weights, jnp.float32) * losses)
 
 
 def fc_head_init(key, in_dim: int, n_classes: int) -> Dict[str, jnp.ndarray]:

@@ -166,6 +166,85 @@ def distill_lm_students(key, teacher_params, teacher_cfg: ModelConfig,
     return students
 
 
+def failout_finetune_lm(students: Sequence[LMStudent], teacher_params,
+                        teacher_cfg: ModelConfig, data_batches,
+                        cfg: "FO.FailoutConfig", *,
+                        steps: Optional[int] = None, lr: float = 1e-3,
+                        dcfg: DS.DistillConfig = DS.DistillConfig(alpha=1.0),
+                        arrays=None) -> List[LMStudent]:
+    """Failout phase at LM scale: jointly fine-tune every student (params +
+    feature head) on the quorum-merged token prediction under sampled
+    aliveness masks.
+
+    The merge mirrors serving: each student's portion is scattered back to
+    its partition's teacher channels, masked portions contribute zeros, and
+    the merged hidden state flows through the TEACHER's LM head (the source
+    device's shared head). Per step the portions are computed once and the
+    KD loss is vmapped over the leading pattern axis — one compiled step.
+    Masks come from the same :class:`~repro.core.failout.FailoutSampler`
+    as the CNN path (``arrays`` supplies the plan's
+    :class:`~repro.core.simulator.PlanArrays` for scenario mode), so runs
+    are bit-reproducible per ``(seed, step)``. Students are updated
+    functionally; the returned list replaces the input."""
+    from repro.core import failout as FO
+    steps = cfg.steps if steps is None else steps
+    K = len(students)
+    sampler = FO.FailoutSampler(cfg, n_slots=K, arrays=arrays)
+    weights = jnp.asarray(sampler.weights(), jnp.float32)
+    d = teacher_cfg.d_model
+    perm = np.concatenate([st.partition for st in students])
+    if sorted(perm.tolist()) != list(range(d)):
+        raise ValueError("student partitions must cover every teacher "
+                         "channel exactly once")
+    inv = np.empty(d, np.int64)
+    inv[perm] = np.arange(d)
+    part_dims = [len(st.partition) for st in students]
+    scfgs = [st.cfg for st in students]
+
+    @jax.jit
+    def step(plist, projlist, tokens, col_masks):
+        t_hidden = lm_final_hidden(teacher_params, teacher_cfg, tokens)
+        t_logits = T._lm_head(teacher_params, teacher_cfg, t_hidden)
+        labels = jnp.argmax(t_logits, -1)
+        V = teacher_cfg.vocab
+
+        def loss_fn(ps, projs):
+            portions = [lm_final_hidden(p, c, tokens).astype(jnp.float32)
+                        @ pr for p, c, pr in zip(ps, scfgs, projs)]
+            merged = jnp.concatenate(portions, axis=-1)[..., inv]
+
+            def one(cm):
+                logits = T._lm_head(teacher_params, teacher_cfg,
+                                    (merged * cm).astype(
+                                        teacher_cfg.compute_dtype))
+                return DS.kd_loss(logits.reshape(-1, V),
+                                  t_logits.reshape(-1, V),
+                                  labels.reshape(-1), dcfg)
+
+            return jnp.sum(weights * jax.vmap(one)(col_masks))
+
+        loss, (gp, gproj) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            plist, projlist)
+        plist = [jax.tree.map(lambda a, g: a - lr * g.astype(a.dtype), p, g)
+                 for p, g in zip(plist, gp)]
+        projlist = [pr - lr * g for pr, g in zip(projlist, gproj)]
+        return plist, projlist, loss
+
+    plist = [st.params for st in students]
+    projlist = [st.proj for st in students]
+    for i, tokens in enumerate(data_batches()):
+        if i >= steps:
+            break
+        slot_masks = sampler.masks(i)                     # (P, K)
+        col_masks = np.zeros((slot_masks.shape[0], d), np.float32)
+        for k, st in enumerate(students):
+            col_masks[:, st.partition] = slot_masks[:, k:k + 1]
+        plist, projlist, _ = step(plist, projlist, tokens,
+                                  jnp.asarray(col_masks))
+    return [LMStudent(st.cfg, p, pr, st.partition)
+            for st, p, pr in zip(students, plist, projlist)]
+
+
 def plan_lm_rocoin(devices: Sequence[Device], teacher_params,
                    teacher_cfg: ModelConfig, val_tokens: jnp.ndarray,
                    *, p_th: float = 0.25) -> Tuple[Plan, np.ndarray]:

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import activation_graph as AG
 from repro.core import distill as DS
+from repro.core import failout as FO
 from repro.core import planner as PL
 from repro.core.assignment import StudentArch
 from repro.core.grouping import Device
@@ -176,7 +177,10 @@ class Ensemble:
             else:
                 _, feats, _ = forward(params, cfg, x)
                 outs.append(feats)
-        return DS.aggregate_portions(outs, self.part_dims)
+        # batch hint keeps the beyond-quorum all-missing pattern defined
+        # (zero features → FC bias) instead of raising mid-sweep
+        return DS.aggregate_portions(outs, self.part_dims,
+                                     batch=int(x.shape[0]))
 
     def predict(self, x: jnp.ndarray, arrived: Optional[np.ndarray] = None
                 ) -> jnp.ndarray:
@@ -191,6 +195,17 @@ class Ensemble:
             correct += int((pred == y).sum())
             total += len(y)
         return correct / total
+
+    def robustness_curve(self, data: SyntheticImages, *, max_losses: int = 2,
+                         batches: int = 2, batch: int = 256,
+                         seed0: int = 10_000) -> "FO.RobustnessCurve":
+        """Measured accuracy-vs-#slot-losses export (every ≤max_losses
+        pattern) — the contract :func:`repro.core.planner.thin_replicas`
+        consumes to trade replicas against trained-in robustness."""
+        return FO.measure_robustness_curve(
+            lambda m: self.accuracy(data, arrived=m, batches=batches,
+                                    batch=batch, seed0=seed0),
+            len(self.students), max_losses)
 
 
 @dataclasses.dataclass
@@ -228,8 +243,15 @@ def build_rocoin(key, *, n_classes: int = 10, teacher_depth: int = 16,
                  data: Optional[SyntheticImages] = None,
                  planner: str = "rocoin",
                  teacher: Optional[TeacherBundle] = None,
+                 failout: Optional[FO.FailoutConfig] = None,
                  batch: int = 128) -> Ensemble:
-    """Run the whole offline phase. planner ∈ {rocoin, rocoin-g, hetnonn, nonn}."""
+    """Run the whole offline phase. planner ∈ {rocoin, rocoin-g, hetnonn, nonn}.
+
+    ``failout`` appends the failure-aware phase: after per-student
+    distillation and FC training, students + head are jointly fine-tuned on
+    the quorum-merged prediction under sampled aliveness masks
+    (:func:`failout_finetune`) so the ensemble degrades gracefully under
+    every trained ≤r-loss pattern."""
     from repro.core import simulator as SIM
 
     devices = list(devices) if devices is not None else SIM.make_fleet(8, seed=1)
@@ -294,7 +316,82 @@ def build_rocoin(key, *, n_classes: int = 10, teacher_depth: int = 16,
     if ir is None:      # baseline planners produce object plans; lift them
         from repro.core.plan_ir import PlanIR
         ir = PlanIR.from_plan(plan, students=nominal, devices=devices)
-    return Ensemble(plan, students, fc, part_dims, teacher_acc, ir=ir)
+    ens = Ensemble(plan, students, fc, part_dims, teacher_acc, ir=ir)
+    if failout is not None:
+        ens = failout_finetune(ens, teacher, failout, batch=batch)
+    return ens
+
+
+def failout_finetune(ens: Ensemble, teacher: TeacherBundle,
+                     cfg: FO.FailoutConfig, *, steps: Optional[int] = None,
+                     batch: int = 128, lr: float = 0.01,
+                     dcfg: DS.DistillConfig = DS.DistillConfig()) -> Ensemble:
+    """Failout phase: jointly fine-tune every student AND the FC head on the
+    quorum-merged prediction under sampled aliveness masks.
+
+    Per step, the concatenated student portions are computed ONCE and the
+    merged KD loss is vmapped over the leading pattern axis
+    (:func:`repro.core.distill.failout_merged_loss`) — one compiled step
+    regardless of P. Masks come from the config's
+    :class:`~repro.core.failout.FailoutSampler` (pattern enumeration or the
+    vectorized failure simulator), split per-step from a deterministic
+    ``(seed, step)`` stream; the all-alive pattern is always pattern 0, so
+    the failure-free path stays in the objective and does not regress.
+    ``FailoutConfig(max_losses=0)`` runs the identical loop on the all-alive
+    pattern only — the equal-compute failure-blind baseline. ``lr`` is
+    fine-tune-scale (well below the distillation lr) so neither arm walks
+    away from the base ensemble it refines.
+
+    Returns a NEW :class:`Ensemble` (the input is not mutated — benchmarks
+    branch failout and failure-blind arms off one base ensemble)."""
+    from repro.core import simulator as SIM
+    steps = cfg.steps if steps is None else steps
+    arrays = None
+    if cfg.mode == "scenario":
+        arrays = SIM.plan_arrays(ens.ir if ens.ir is not None else ens.plan)
+    sampler = FO.FailoutSampler(cfg, n_slots=len(ens.students), arrays=arrays)
+    weights = sampler.weights()
+    data = teacher.data
+    tparams, tcfg = teacher.params, teacher.cfg
+
+    cfgs = [c for c, _, _ in ens.students]
+    fwds = [f for _, _, f in ens.students]
+    plist = [p for _, p, _ in ens.students]
+    moms = [sgd_init(p) for p in plist]
+    fc, fcm = ens.fc, jax.tree.map(jnp.zeros_like, ens.fc)
+
+    @jax.jit
+    def step(plist, fc, moms, fcm, x, y, col_masks):
+        t_logits, _, _ = cnn.wrn_forward(tparams, tcfg, x)
+
+        def loss_fn(ps, f):
+            feats, newps = [], []
+            for scfg, sfwd, p in zip(cfgs, fwds, ps):
+                _, fk, newp = sfwd(p, scfg, x, train=True)
+                feats.append(fk)
+                newps.append(newp)
+            cat = jnp.concatenate(feats, axis=-1)
+            loss = DS.failout_merged_loss(f, cat, t_logits, y, col_masks,
+                                          jnp.asarray(weights), dcfg)
+            return loss, newps
+
+        (loss, newps), (gp, gf) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(plist, fc)
+        out_p, out_m = [], []
+        for p, g, m, newp in zip(plist, gp, moms, newps):
+            p2, m2 = sgd_update(p, g, m, lr=lr)
+            out_p.append(merge_bn_stats(p2, newp))   # BN running stats only
+            out_m.append(m2)
+        fc2, fcm2 = sgd_update(fc, gf, fcm, lr=2 * lr, wd=0.0)
+        return out_p, fc2, out_m, fcm2, loss
+
+    for i, (x, y) in enumerate(data.epoch(batch, steps, seed0=130_000)):
+        col_masks = DS.expand_slot_masks(sampler.masks(i), ens.part_dims)
+        plist, fc, moms, fcm, _ = step(plist, fc, moms, fcm,
+                                       jnp.asarray(x), jnp.asarray(y),
+                                       col_masks)
+    students = [(c, p, f) for (c, _, f), p in zip(ens.students, plist)]
+    return dataclasses.replace(ens, students=students, fc=fc)
 
 
 def _distill_student(sparams, scfg, sfwd, tparams, tcfg, part, data,

@@ -244,6 +244,85 @@ def tune_d_th(devices: Sequence[Device], A: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# robustness-curve-aware replica thinning (failout → placement trade)
+# ---------------------------------------------------------------------------
+
+def plan_loss_tail(ir: PlanIR, tolerated: int) -> float:
+    """P(more than ``tolerated`` slots miss simultaneously) — the
+    survivability measure replica thinning is held to. Exact
+    Poisson-binomial over the per-slot Eq. 1f outage probabilities:
+    P(fewer than K − tolerated slots arrive)."""
+    from repro.coding.codes import arrival_shortfall_prob
+    K = ir.K
+    if K == 0:
+        return 1.0
+    arrive = 1.0 - ir.group_outage()
+    return arrival_shortfall_prob(arrive, K - min(tolerated, K))
+
+
+def thin_replicas(ir: PlanIR, curve, *, max_acc_drop: float = 0.01,
+                  p_th: Optional[float] = None) -> PlanIR:
+    """Trade replicas against trained-in robustness: a failout-trained
+    ensemble whose measured :class:`~repro.core.failout.RobustnessCurve`
+    shows ≤ ``max_acc_drop`` worst-case accuracy drop at up to ℓ slot
+    losses can ship with fewer replicas — losing a slot is no longer a
+    failed answer, it is a trained, near-baseline-accuracy answer.
+
+    The per-slot Eq. 1f constraint (every group's outage ≤ p_th) therefore
+    relaxes to the PLAN-level survivability target
+    :func:`plan_loss_tail` ``(ir, ℓ) ≤ p_th``: the probability that MORE
+    slots miss than training hardened against stays within the target the
+    replicated plan was built for. Replicas are removed greedily — always
+    a group's SLOWEST member, so the all-alive Eq. 1a objective is
+    untouched — from the largest groups first, stopping before the tail
+    constraint would break; every group keeps ≥ 1 member. Freed devices
+    become unassigned spare columns (the controller's repair pool, or
+    parity budget for :func:`repro.coding.planner.select_redundancy`).
+
+    Coded plans are returned unchanged — their redundancy is already
+    budgeted share-wise; thinning applies to the replicate mode the
+    distillation pipeline produces."""
+    if ir.coding is not None or ir.compute_coding is not None:
+        return ir
+    if ir.K == 0 or (ir.student_of < 0).any():
+        return ir
+    tolerated = int(curve.tolerated(max_acc_drop))
+    if tolerated < 1:
+        return ir
+    target = ir.p_th if p_th is None else float(p_th)
+    member = np.array(ir.member)
+    lat = ir.latency_nd[ir.student_of]              # (K, N)
+
+    def tail(m: np.ndarray) -> float:
+        arrive = 1.0 - np.where(m, ir.device_caps[None, :, 3],
+                                1.0).prod(axis=1)
+        from repro.coding.codes import arrival_shortfall_prob
+        return arrival_shortfall_prob(arrive, ir.K - min(tolerated, ir.K))
+
+    while True:
+        sizes = member.sum(axis=1)
+        dropped = False
+        # largest groups first: they paid the most replication for the
+        # failure mode training now covers
+        for s in np.argsort(-sizes, kind="stable"):
+            if sizes[s] < 2:
+                continue
+            cols = np.flatnonzero(member[s])
+            slowest = int(cols[np.argmax(lat[s, cols])])
+            cand = np.array(member)
+            cand[s, slowest] = False
+            if tail(cand) <= target + 1e-12:
+                member = cand
+                dropped = True
+                break
+        if not dropped:
+            break
+    if member.sum() == ir.member.sum():
+        return ir
+    return ir.with_(member=member).validate()
+
+
+# ---------------------------------------------------------------------------
 # baselines (§V-A)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,133 @@
+"""Chaos fuzz regression (robustness satellite): random aliveness matrices —
+including beyond-quorum-distance patterns and all-dead rows — must produce
+bit-identical results on the fused megastep vs the legacy per-slot loop, and
+must never emit a NaN. Seeded and CPU-light — CI fast lane."""
+import numpy as np
+import pytest
+
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.plan_ir import (PlanIR, device_matrix, eq1a_latency,
+                                student_matrix)
+from repro.runtime.engine import build_demo_server
+
+
+def _toy_ir(M=8):
+    devs = [Device("a", 1e7, 2e6, 500, 0.3), Device("b", 2e7, 2e6, 500, 0.3),
+            Device("c", 1e7, 2e6, 500, 0.3), Device("d", 3e7, 2e6, 500, 0.3)]
+    names, dcaps = device_matrix(devs)
+    snames, scaps = student_matrix([StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)])
+    member = np.array([[1, 1, 0, 0], [0, 0, 1, 1]], bool)
+    part = np.zeros((2, M), bool)
+    part[0, :M // 2] = True
+    part[1, M // 2:] = True
+    return PlanIR(names, dcaps, snames, scaps, member, part,
+                  np.zeros(2, np.int64), np.arange(2, dtype=np.int64),
+                  eq1a_latency(scaps, dcaps), np.zeros((M, M)), 1.0, 0.5)
+
+
+class _ScriptedAlive:
+    """A failure scenario that replays pre-drawn aliveness matrices verbatim
+    — the fuzzer's way of forcing the SAME chaos onto two servers. Matches
+    the scenario interface ``sample(rng, arrays, trials) -> (alive, delay)``;
+    the rng is deliberately ignored."""
+
+    deadline = None
+
+    def __init__(self, matrices):
+        self._queue = list(matrices)
+
+    def sample(self, rng, arrays, trials):
+        alive = self._queue.pop(0)
+        assert alive.shape == (trials, len(arrays.names))
+        return alive, None
+
+
+def _chaos_matrices(rng, n_batches, rows_per_batch, n_devices):
+    """Random aliveness, biased to include the nasty corners: per-slot
+    wipeouts, all-dead rows, and all-alive rows."""
+    out = []
+    for _ in range(n_batches):
+        alive = rng.random((rows_per_batch, n_devices)) > rng.uniform(0.1, 0.9)
+        r = rng.integers(0, rows_per_batch)
+        alive[r] = False                       # beyond any quorum distance
+        if rows_per_batch > 1:
+            alive[(r + 1) % rows_per_batch] = True
+        out.append(alive)
+    return out
+
+
+def _pair():
+    ir = _toy_ir()
+    build = dict(feat=8, hidden=16, n_classes=3, seed=0)
+    return (build_demo_server(ir, **build),
+            build_demo_server(ir, fastpath=False, **build))
+
+
+def _x(rows, seed):
+    return np.random.default_rng(seed).normal(size=(rows, 8)).astype(
+        np.float32)
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_fuzz_fused_matches_legacy_and_never_nan(trial):
+    fused, legacy = _pair()
+    assert fused.fastpath_active and not legacy.fastpath_active
+    rng = np.random.default_rng(1000 + trial)
+    xs = [_x(int(rng.integers(1, 6)), seed=trial * 100 + i)
+          for i in range(int(rng.integers(2, 5)))]
+    # ONE matrix per serve_batch call, one row per request: random chaos
+    # plus the corners — an all-dead row next to a failure-free row
+    matrix = rng.random((len(xs), 4)) > 0.5
+    matrix[0] = False                          # all devices dead for req 0
+    if len(xs) > 1:
+        matrix[1] = True                       # failure-free row alongside
+    fused.failure = _ScriptedAlive([matrix.copy()])
+    legacy.failure = _ScriptedAlive([matrix.copy()])
+    rf = fused.serve_batch(xs, rng=np.random.default_rng(trial))
+    rl = legacy.serve_batch(xs, rng=np.random.default_rng(trial))
+    for a, b in zip(rf, rl):
+        np.testing.assert_array_equal(a.logits, b.logits)
+        assert np.isfinite(a.logits).all(), "fused path emitted non-finite"
+        assert np.isfinite(b.logits).all(), "legacy path emitted non-finite"
+        assert (a.arrived == b.arrived).all()
+        assert a.degraded == b.degraded
+
+
+def test_fuzz_many_batches_sequenced():
+    """A stream of chaotic batches through long-lived servers: the scripted
+    scenario replays the identical matrix sequence to both, results must
+    stay bit-identical batch after batch."""
+    fused, legacy = _pair()
+    rng = np.random.default_rng(77)
+    rows = 3
+    mats = _chaos_matrices(rng, 8, rows, 4)
+    fused.failure = _ScriptedAlive([m.copy() for m in mats])
+    legacy.failure = _ScriptedAlive([m.copy() for m in mats])
+    for b in range(8):
+        # `rows` requests per batch: one scripted matrix row per request
+        xs = [_x(2, seed=b * 7 + i) for i in range(rows)]
+        ra = fused.serve_batch(xs, rng=np.random.default_rng(b))
+        ro = legacy.serve_batch(xs, rng=np.random.default_rng(b))
+        for a, o in zip(ra, ro):
+            np.testing.assert_array_equal(a.logits, o.logits)
+            assert np.isfinite(a.logits).all() and np.isfinite(o.logits).all()
+            assert (a.arrived == o.arrived).all()
+
+
+def test_all_dead_row_is_defined_not_nan():
+    """Every portion missing (beyond any quorum distance) must yield the
+    FC bias — a defined degraded answer — on BOTH paths, never 0/0."""
+    fused, legacy = _pair()
+    dead = np.zeros((1, 4), bool)
+    fused.failure = _ScriptedAlive([dead.copy()])
+    legacy.failure = _ScriptedAlive([dead.copy()])
+    x = _x(3, seed=2)
+    a = fused.serve_batch([x], rng=np.random.default_rng(0))[0]
+    b = legacy.serve_batch([x], rng=np.random.default_rng(0))[0]
+    assert not a.arrived.any() and a.degraded
+    np.testing.assert_array_equal(a.logits, b.logits)
+    assert np.isfinite(a.logits).all()
+    np.testing.assert_allclose(
+        a.logits, np.broadcast_to(np.asarray(fused.fc_bias), (3, 3)),
+        rtol=1e-6)

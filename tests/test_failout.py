@@ -1,0 +1,362 @@
+"""Failout training layer: mask enumeration/sampling determinism, the
+hardened aggregation fallback over every ≤S-loss mask, the vmapped merged
+loss, the robustness-curve contract, and planner replica thinning.
+All seeded — CI fast lane (the trainer-heavy determinism run lives in
+``TestFailoutDeterminism`` with monkeypatch-shrunk knobs)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distill as DS
+from repro.core import failout as FO
+from repro.core.assignment import StudentArch
+from repro.core.grouping import Device
+from repro.core.plan_ir import (PlanIR, device_matrix, eq1a_latency,
+                                student_matrix)
+from repro.core.planner import plan_loss_tail, thin_replicas
+from repro.core.simulator import plan_arrays
+
+
+def _toy_ir(members=((0, 1, 2), (3, 4)), p_out=0.25, p_th=0.25, M=8):
+    devs = [Device(f"d{i}", 1e7 * (1 + i % 3), 2e6, 500, p_out)
+            for i in range(max(max(m) for m in members) + 1)]
+    names, dcaps = device_matrix(devs)
+    snames, scaps = student_matrix([StudentArch("s", 5e6, 0.6e6, 64, 0.15e6)])
+    K = len(members)
+    member = np.zeros((K, len(devs)), bool)
+    for k, cols in enumerate(members):
+        member[k, list(cols)] = True
+    part = np.zeros((K, M), bool)
+    splits = np.array_split(np.arange(M), K)
+    for k, cols in enumerate(splits):
+        part[k, cols] = True
+    return PlanIR(names, dcaps, snames, scaps, member, part,
+                  np.zeros(K, np.int64), np.arange(K, dtype=np.int64),
+                  eq1a_latency(scaps, dcaps), np.zeros((M, M)), 1.0,
+                  p_th).validate()
+
+
+# -- pattern enumeration -------------------------------------------------------
+
+def test_enumerate_patterns_all_alive_first_and_counts():
+    m = FO.enumerate_loss_patterns(4, 2)
+    assert m.shape == (1 + 4 + 6, 4)
+    assert m[0].all()                          # all-alive always pattern 0
+    n_lost = (~m).sum(axis=1)
+    assert n_lost.max() == 2 and (np.diff(n_lost) >= 0).all()
+    # patterns are unique
+    assert len({tuple(r) for r in m.tolist()}) == m.shape[0]
+
+
+def test_enumerate_patterns_beyond_quorum_included():
+    m = FO.enumerate_loss_patterns(2, 5)
+    assert (~m[-1]).all()                      # all-dead pattern is defined
+
+
+def test_enumerate_zero_losses_is_failure_blind():
+    m = FO.enumerate_loss_patterns(3, 0)
+    assert m.shape == (1, 3) and m.all()
+
+
+# -- sampler -------------------------------------------------------------------
+
+def test_sampler_enumerate_is_step_independent():
+    s = FO.FailoutSampler(FO.FailoutConfig(max_losses=1), n_slots=3)
+    np.testing.assert_array_equal(s.masks(0), s.masks(17))
+    assert s.n_patterns == 4
+
+
+def test_sampler_weights_sum_to_one_alive_first():
+    s = FO.FailoutSampler(FO.FailoutConfig(max_losses=2, alive_weight=0.7),
+                          n_slots=3)
+    w = s.weights()
+    assert w.shape == (s.n_patterns,)
+    assert abs(w.sum() - 1.0) < 1e-12 and w[0] == 0.7
+    blind = FO.FailoutSampler(FO.FailoutConfig(max_losses=0), n_slots=3)
+    np.testing.assert_array_equal(blind.weights(), [1.0])
+
+
+def test_sampler_scenario_deterministic_per_seed_step():
+    from repro.core.simulator import FailureModel
+    arrays = plan_arrays(_toy_ir())
+    cfg = FO.FailoutConfig(mode="scenario", n_samples=6, seed=3,
+                           scenario=FailureModel(crash_prob=0.4,
+                                                 outages=False))
+    a = FO.FailoutSampler(cfg, n_slots=2, arrays=arrays)
+    b = FO.FailoutSampler(cfg, n_slots=2, arrays=arrays)
+    np.testing.assert_array_equal(a.masks(5), b.masks(5))   # same (seed, step)
+    assert a.masks(5).shape == (7, 2) and a.masks(5)[0].all()
+    # a different step (or seed) draws a different stream
+    diff_step = not np.array_equal(a.masks(5), a.masks(6))
+    cfg2 = FO.FailoutConfig(mode="scenario", n_samples=6, seed=4,
+                            scenario=FailureModel(crash_prob=0.4,
+                                                  outages=False))
+    diff_seed = not np.array_equal(
+        a.masks(5), FO.FailoutSampler(cfg2, 2, arrays=arrays).masks(5))
+    assert diff_step or diff_seed
+
+
+def test_sampler_scenario_requires_arrays():
+    from repro.core.simulator import FailureModel
+    cfg = FO.FailoutConfig(mode="scenario", scenario=FailureModel())
+    with pytest.raises(ValueError, match="PlanArrays"):
+        FO.FailoutSampler(cfg, n_slots=2)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="mode"):
+        FO.FailoutConfig(mode="nope")
+    with pytest.raises(ValueError, match="scenario"):
+        FO.FailoutConfig(mode="scenario")
+    with pytest.raises(ValueError, match="alive_weight"):
+        FO.FailoutConfig(alive_weight=0.0)
+
+
+# -- hardened aggregation: every ≤S-loss mask ---------------------------------
+
+@pytest.mark.parametrize("mask", list(itertools.product([0, 1], repeat=3)))
+def test_aggregate_portions_defined_for_every_mask(mask):
+    """Satellite: every ≤S-loss pattern — including all-portions-missing —
+    yields a defined, finite, correctly-zeroed merge."""
+    dims = [2, 3, 4]
+    B = 5
+    key = jax.random.key(0)
+    full = [jax.random.normal(jax.random.fold_in(key, k), (B, d))
+            for k, d in enumerate(dims)]
+    portions = [p if m else None for p, m in zip(full, mask)]
+    agg = np.asarray(DS.aggregate_portions(portions, dims, batch=B))
+    assert agg.shape == (B, sum(dims))
+    assert np.isfinite(agg).all()
+    off = 0
+    for p, m, d in zip(full, mask, dims):
+        got = agg[:, off:off + d]
+        if m:
+            np.testing.assert_array_equal(got, np.asarray(p, np.float32))
+        else:
+            np.testing.assert_array_equal(got, 0.0)
+        off += d
+
+
+def test_aggregate_all_missing_without_batch_still_raises():
+    with pytest.raises(ValueError):
+        DS.aggregate_portions([None, None], [3, 5])
+
+
+def test_all_missing_merge_yields_bias_logits_not_nan():
+    fc = DS.fc_head_init(jax.random.key(1), 9, 4)
+    agg = DS.aggregate_portions([None, None, None], [2, 3, 4], batch=6)
+    logits = np.asarray(DS.fc_head_apply(fc, agg))
+    assert np.isfinite(logits).all()
+    np.testing.assert_allclose(logits,
+                               np.broadcast_to(np.asarray(fc["bias"]), (6, 4)))
+
+
+# -- the vmapped merged loss ---------------------------------------------------
+
+def test_failout_loss_all_alive_equals_plain_kd():
+    key = jax.random.key(2)
+    dims = [3, 5]
+    feats = jax.random.normal(key, (8, sum(dims)))
+    tl = jax.random.normal(jax.random.fold_in(key, 1), (8, 4))
+    labels = jnp.argmax(tl, -1)
+    fc = DS.fc_head_init(jax.random.fold_in(key, 2), sum(dims), 4)
+    cfg = DS.DistillConfig()
+    cm = DS.expand_slot_masks(np.ones((1, 2), bool), dims)
+    got = float(DS.failout_merged_loss(fc, feats, tl, labels, cm,
+                                       np.ones(1), cfg))
+    want = float(DS.kd_loss(DS.fc_head_apply(fc, feats), tl, labels, cfg))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_failout_loss_is_weighted_sum_over_patterns():
+    key = jax.random.key(3)
+    dims = [3, 5]
+    feats = jax.random.normal(key, (4, sum(dims)))
+    tl = jax.random.normal(jax.random.fold_in(key, 1), (4, 4))
+    labels = jnp.argmax(tl, -1)
+    fc = DS.fc_head_init(jax.random.fold_in(key, 2), sum(dims), 4)
+    cfg = DS.DistillConfig()
+    masks = FO.enumerate_loss_patterns(2, 2)          # includes all-dead
+    cm = DS.expand_slot_masks(masks, dims)
+    w = FO.FailoutSampler(FO.FailoutConfig(max_losses=2), 2).weights()
+    got = float(DS.failout_merged_loss(fc, feats, tl, labels, cm, w, cfg))
+    parts = []
+    for p in range(masks.shape[0]):
+        f = feats * jnp.asarray(cm[p])[None, :]
+        parts.append(float(DS.kd_loss(DS.fc_head_apply(fc, f), tl, labels,
+                                      cfg)))
+    assert got == pytest.approx(float(np.dot(w, parts)), rel=1e-5)
+    assert np.isfinite(got)
+
+
+def test_failout_loss_gradients_flow_to_fc():
+    key = jax.random.key(4)
+    dims = [2, 2]
+    feats = jax.random.normal(key, (4, 4))
+    tl = jax.random.normal(jax.random.fold_in(key, 1), (4, 3))
+    labels = jnp.argmax(tl, -1)
+    fc = DS.fc_head_init(jax.random.fold_in(key, 2), 4, 3)
+    masks = FO.enumerate_loss_patterns(2, 1)
+    cm = DS.expand_slot_masks(masks, dims)
+    w = np.full(masks.shape[0], 1.0 / masks.shape[0])
+
+    g = jax.grad(lambda f: DS.failout_merged_loss(
+        f, feats, tl, labels, cm, w, DS.DistillConfig()))(fc)
+    assert float(jnp.abs(g["kernel"]).sum()) > 0
+
+
+def test_expand_slot_masks_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="partitions"):
+        DS.expand_slot_masks(np.ones((2, 3), bool), [4, 4])
+
+
+# -- robustness curve ----------------------------------------------------------
+
+def test_curve_tolerated_contiguous_prefix():
+    c = FO.RobustnessCurve([0, 1, 2, 3], [0.9, 0.895, 0.80, 0.894],
+                           [0.9, 0.893, 0.75, 0.89])
+    assert c.tolerated(0.01) == 1          # l=2 breaks; l=3 cannot rescue it
+    assert c.tolerated(0.2) == 3
+    assert c.tolerated(0.001) == 0
+    np.testing.assert_allclose(c.drop()[0], 0.0)
+
+
+def test_curve_validation():
+    with pytest.raises(ValueError, match="all-alive"):
+        FO.RobustnessCurve([1, 2], [0.9, 0.8], [0.9, 0.8])
+    with pytest.raises(ValueError, match="length"):
+        FO.RobustnessCurve([0, 1], [0.9], [0.9, 0.8])
+
+
+def test_measure_curve_mean_and_worst():
+    # accuracy depends only on which slot is lost: slot 0 is load-bearing
+    def acc(mask):
+        if mask.all():
+            return 0.9
+        return 0.5 if not mask[0] else 0.88
+
+    c = FO.measure_robustness_curve(acc, 3, 1)
+    np.testing.assert_array_equal(c.losses, [0, 1])
+    assert c.accuracy[1] == pytest.approx((0.5 + 0.88 + 0.88) / 3)
+    assert c.worst[1] == pytest.approx(0.5)
+    assert c.tolerated(0.05) == 0          # worst case gates the trade
+
+
+# -- planner: replica thinning -------------------------------------------------
+
+def test_thin_replicas_drops_and_keeps_objective():
+    ir = _toy_ir(members=((0, 1, 2), (3, 4)))
+    curve = FO.RobustnessCurve([0, 1], [0.9, 0.897], [0.9, 0.895])
+    thin = thin_replicas(ir, curve)
+    assert thin.member.sum() < ir.member.sum()
+    assert thin.member.any(axis=1).all()           # every slot keeps a member
+    assert thin.objective() == pytest.approx(ir.objective())
+    # the survivability target holds at the trained tolerance
+    assert plan_loss_tail(thin, 1) <= ir.p_th + 1e-12
+
+
+def test_thin_replicas_respects_tail_target():
+    # p_out=0.3, pairs: baseline tail = 0.09² = 0.0081. One drop → 0.3·0.09
+    # = 0.027 ≤ 0.03; a second drop → 0.09 > 0.03 must be refused.
+    ir = _toy_ir(members=((0, 1), (2, 3)), p_out=0.3, p_th=0.03)
+    curve = FO.RobustnessCurve([0, 1], [0.9, 0.899], [0.9, 0.899])
+    thin = thin_replicas(ir, curve)
+    assert thin.member.sum() == ir.member.sum() - 1
+    assert plan_loss_tail(thin, 1) <= 0.03 + 1e-12
+    # on an already-over-target plan nothing is safe to drop: identity
+    hot = _toy_ir(members=((0, 1), (2, 3)), p_out=0.6, p_th=0.05)
+    np.testing.assert_array_equal(thin_replicas(hot, curve).member, hot.member)
+
+
+def test_thin_replicas_weak_curve_is_identity():
+    ir = _toy_ir()
+    curve = FO.RobustnessCurve([0, 1], [0.9, 0.5], [0.9, 0.4])
+    assert thin_replicas(ir, curve) is ir
+
+
+def test_thin_replicas_drops_slowest_member_first():
+    ir = _toy_ir(members=((0, 1, 2), (3, 4)))
+    curve = FO.RobustnessCurve([0, 1], [0.9, 0.9], [0.9, 0.9])
+    thin = thin_replicas(ir, curve)
+    for k in range(ir.K):
+        kept = np.flatnonzero(thin.member[k])
+        if len(kept):
+            lat = ir.latency_nd[ir.student_of[k]]
+            fastest = min(np.flatnonzero(ir.member[k]), key=lambda c: lat[c])
+            assert fastest in kept                 # fastest replica survives
+
+
+def test_select_redundancy_consumes_curve():
+    from repro.coding.planner import select_redundancy
+    ir = _toy_ir(members=((0, 1, 2), (3, 4)))
+    curve = FO.RobustnessCurve([0, 1], [0.9, 0.897], [0.9, 0.896])
+    out = select_redundancy(ir, mode="replicate", robustness=curve)
+    assert out.member.sum() < ir.member.sum()
+    # weak curve: the pass is a no-op
+    weak = FO.RobustnessCurve([0, 1], [0.9, 0.5], [0.9, 0.4])
+    same = select_redundancy(ir, mode="replicate", robustness=weak)
+    np.testing.assert_array_equal(same.member, ir.member)
+
+
+# -- determinism (trainer-heavy: slow lane, tiny knobs) ------------------------
+
+@pytest.mark.slow
+class TestFailoutDeterminism:
+    """Satellite: same seed + config → bit-identical trained params."""
+
+    @pytest.fixture(scope="class")
+    def tiny(self):
+        from repro.core.pipeline import build_rocoin, prepare_teacher
+        from repro.core.simulator import make_fleet
+        from repro.data.images import ImageTaskConfig, SyntheticImages
+
+        data = SyntheticImages(ImageTaskConfig(n_classes=10))
+        teacher = prepare_teacher(jax.random.key(0), teacher_depth=10,
+                                  teacher_widen=1, teacher_steps=3, batch=16,
+                                  data=data)
+        ens = build_rocoin(jax.random.key(0), teacher_depth=10,
+                           teacher_widen=1, teacher_steps=3, student_steps=2,
+                           batch=16, devices=make_fleet(4, seed=1,
+                                                        mem_range=(1.2e6, 4e6)),
+                           zoo=["wrn-10-1"], teacher=teacher, data=data)
+        return ens, teacher
+
+    def test_finetune_bit_identical_across_runs(self, tiny):
+        from repro.core.pipeline import failout_finetune
+        ens, teacher = tiny
+        cfg = FO.FailoutConfig(max_losses=1, seed=7, steps=3)
+        a = failout_finetune(ens, teacher, cfg, batch=16)
+        b = failout_finetune(ens, teacher, cfg, batch=16)
+        for la, lb in zip(jax.tree.leaves(a.fc), jax.tree.leaves(b.fc)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        for (_, pa, _), (_, pb, _) in zip(a.students, b.students):
+            for la, lb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        # and it actually trained: the head moved off the base ensemble
+        delta = sum(float(jnp.abs(la - lb).sum()) for la, lb in
+                    zip(jax.tree.leaves(a.fc), jax.tree.leaves(ens.fc)))
+        assert delta > 0
+
+    def test_scenario_mode_bit_identical(self, tiny):
+        from repro.core.pipeline import failout_finetune
+        from repro.core.scenarios import StragglerScenario
+        ens, teacher = tiny
+        cfg = FO.FailoutConfig(mode="scenario", n_samples=3, seed=11, steps=2,
+                               scenario=StragglerScenario())
+        a = failout_finetune(ens, teacher, cfg, batch=16)
+        b = failout_finetune(ens, teacher, cfg, batch=16)
+        for la, lb in zip(jax.tree.leaves(a.fc), jax.tree.leaves(b.fc)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_all_alive_accuracy_survives_failout(self, tiny):
+        from repro.core.pipeline import failout_finetune
+        ens, teacher = tiny
+        cfg = FO.FailoutConfig(max_losses=1, seed=7, steps=3)
+        tuned = failout_finetune(ens, teacher, cfg, batch=16)
+        curve = tuned.robustness_curve(teacher.data, max_losses=1, batches=1,
+                                       batch=64)
+        assert curve.losses.tolist() == [0, 1]
+        assert np.isfinite(curve.accuracy).all()

@@ -66,3 +66,50 @@ def test_lm_distillation_reduces_loss_and_portions_aggregate():
     # portion dims match the partition sizes
     for st, p in zip(students, parts):
         assert st.proj.shape[1] == len(p)
+
+
+def test_lm_failout_finetune_deterministic_and_finite():
+    """Failout at LM scale: same seed+config → bit-identical students, and
+    the merged head still produces finite logits under a lost slot."""
+    from repro.core import failout as FO
+    from repro.models import transformer as T
+    params, cfg = _teacher()
+    key = jax.random.key(3)
+    parts = NC.ncut_partition(
+        LM.lm_activation_graph(params, cfg,
+                               jax.random.randint(key, (2, 32), 0, cfg.vocab)),
+        K=2)
+
+    def batches():
+        i = 0
+        while True:
+            yield jax.random.randint(jax.random.fold_in(key, i), (2, 16),
+                                     0, cfg.vocab)
+            i += 1
+
+    students = LM.distill_lm_students(key, params, cfg, parts, batches,
+                                      steps=2)
+    fcfg = FO.FailoutConfig(max_losses=1, seed=9, steps=2)
+    a = LM.failout_finetune_lm(students, params, cfg, batches, fcfg)
+    b = LM.failout_finetune_lm(students, params, cfg, batches, fcfg)
+    for sa, sb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(sa.proj), np.asarray(sb.proj))
+        for la, lb in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # input students were not mutated; the tuned ones moved
+    moved = sum(float(jnp.abs(sa.proj - st.proj).sum())
+                for sa, st in zip(a, students))
+    assert moved > 0
+    # merged prediction with slot 1's portion zeroed stays finite
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    d = cfg.d_model
+    perm = np.concatenate([st.partition for st in a])
+    inv = np.empty(d, np.int64)
+    inv[perm] = np.arange(d)
+    portions = [LM.student_portion(st, toks) for st in a]
+    merged = jnp.concatenate(portions, -1)[..., inv]
+    mask = np.ones(d, np.float32)
+    mask[a[1].partition] = 0.0
+    logits = T._lm_head(params, cfg,
+                        (merged * mask).astype(cfg.compute_dtype))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
