@@ -33,6 +33,7 @@ from math import comb
 import numpy as np
 
 from benchmarks.common import emit
+from repro.obs.stats import percentile
 from repro.coding.planner import select_redundancy
 from repro.core.assignment import StudentArch
 from repro.core.grouping import Device
@@ -132,8 +133,8 @@ def main() -> None:
     wall_coded = (time.perf_counter() - t0) * 1e6 / TRIALS
     lat_rep = _served_latencies(srv_rep, FEAT, TRIALS, seed=3)
 
-    p99_coded = float(np.percentile(lat_coded, 99))
-    p99_rep = float(np.percentile(lat_rep, 99))
+    p99_coded = percentile(lat_coded, 99)
+    p99_rep = percentile(lat_rep, 99)
     p99_pred = _order_stat_p99(n, k, shard_t0, unit)
     p99_rep_pred = _order_stat_p99(2, 1, rep_t0, unit)  # min of 2 replicas
     track = abs(p99_coded - p99_pred) / p99_pred
@@ -157,7 +158,7 @@ def main() -> None:
     emit("coded_compute/engine", 0.0,
          f"share_futures={s['share_futures']};"
          f"cancelled_shares={s['cancelled_shares']};"
-         f"recovery_p99={float(np.percentile(rec, 99)):.4f};"
+         f"recovery_p99={percentile(rec, 99):.4f};"
          f"quorum_rate={s['quorum_rate']:.3f}")
 
     # decode-path serve wall (fused megastep, 64-row batch)

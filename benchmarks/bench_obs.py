@@ -1,0 +1,155 @@
+"""Observability-plane overhead benchmark (src/repro/obs).
+
+The obs plane's two contracts, measured on the PR-8 fleet scenario
+(bench_fleet's shared-pool arm: N MMPP-bursty tenants, site-flap chaos,
+live repair through the spare broker, autoscaling):
+
+  obs/identical   — a tracing-OFF run after the instrumentation refactor
+                    is BIT-IDENTICAL to a tracing-ON run: every request
+                    record, batch and migration compares equal field by
+                    field (tracing must not touch RNG draws or event
+                    order). gate_identical=1 is the acceptance bit.
+  obs/overhead    — full tracing + metrics wall-clock overhead vs the
+                    same run untraced, min-of-REPS on alternating runs.
+                    Gate: ≤ 5%.
+  obs/trace       — the ON run's trace dumped as Chrome trace-format
+                    JSON (benchmarks/results/bench_obs.trace.json, the
+                    CI artifact — loadable in https://ui.perfetto.dev),
+                    then round-tripped through ``load_chrome`` and
+                    sanity-checked: no open spans, one closed root span
+                    per completed request.
+  obs/sketch_p99  — the streaming P² latency sketch vs the exact report
+                    p99 over the same requests (documented error bound:
+                    ≤ 15% relative for p99).
+  obs/critpath    — the offline analyzer's p99 critical path; the gate
+                    checks the named segments sum to the request's
+                    measured latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.bench_fleet import N_TENANTS, _build_arm, _traces
+from benchmarks.common import emit
+
+REPS = 2                       # timed runs per arm, alternating off/on
+TRACE_OUT = Path(__file__).resolve().parent / "results" / \
+    "bench_obs.trace.json"
+
+
+def _digest(report):
+    """Canonical value of a fleet run: every request record, batch and
+    migration of every tenant, field by field. Two runs are bit-identical
+    iff their digests compare equal."""
+    out = []
+    for rep in report.reports:
+        out.append((
+            tuple(dataclasses.astuple(r) for r in rep.records),
+            tuple(dataclasses.astuple(b) for b in rep.batches),
+            tuple((t, o.kind, tuple(o.moved_devices), float(o.objective))
+                  for t, o in rep.migrations),
+        ))
+    return tuple(out)
+
+
+def _run(n, traced, seed=0):
+    """One full fleet run; returns (report, wall_s, tracer, metrics)."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
+    fleet = _build_arm(n, shared=True, seed=seed)
+    tracer = metrics = None
+    if traced:
+        fleet.tracer = tracer = Tracer()
+        fleet.metrics = metrics = MetricsRegistry()
+    traces = _traces(n, seed)
+    t0 = time.perf_counter()
+    report = fleet.run(traces)
+    return report, time.perf_counter() - t0, tracer, metrics
+
+
+def obs_overhead() -> None:
+    """Bit-identity + wall overhead + trace validity + sketch agreement."""
+    from repro.obs.report import critical_path
+    from repro.obs.stats import percentile
+    from repro.obs.trace import load_chrome
+
+    n = N_TENANTS[0]
+    _run(n, traced=False)                      # warm the jit caches
+    walls_off, walls_on = [], []
+    digest_off = digest_on = None
+    report_on = tracer = metrics = None
+    for _ in range(REPS):                      # alternate: fair cache state
+        rep, wall, _, _ = _run(n, traced=False)
+        walls_off.append(wall)
+        digest_off = _digest(rep)
+        rep, wall, tracer, metrics = _run(n, traced=True)
+        walls_on.append(wall)
+        digest_on = _digest(rep)
+        report_on = rep
+
+    identical = digest_off == digest_on
+    off, on = min(walls_off), min(walls_on)
+    overhead = (on - off) / off
+    emit("obs/identical", 0.0,
+         f"records={sum(len(r.records) for r in report_on.reports)};"
+         f"gate_identical={int(identical)}")
+    emit("obs/overhead", on * 1e6,
+         f"off_ms={off * 1e3:.1f};on_ms={on * 1e3:.1f};"
+         f"overhead={overhead * 100:.2f}%;events={len(tracer.events)};"
+         f"gate_le_5pct={int(overhead <= 0.05)}")
+
+    # Chrome dump + round-trip sanity: the CI artifact must be loadable
+    TRACE_OUT.parent.mkdir(exist_ok=True)
+    tracer.dump_chrome(TRACE_OUT)
+    back = load_chrome(TRACE_OUT)
+    roots = [e for e in back if e.phase == "X" and e.name == "request"
+             and np.isfinite(e.dur)]
+    completed = sum(1 for r in report_on.reports for q in r.records
+                    if not q.rejected)
+    n_open = sum(1 for e in back if e.attrs.get("open"))
+    emit("obs/trace", 0.0,
+         f"file={TRACE_OUT.name};events={len(back)};roots={len(roots)};"
+         f"completed={completed};open_spans={n_open};"
+         f"gate_valid={int(len(roots) == completed and n_open == 0)}")
+
+    # streaming sketch vs exact percentile, per tenant (the lanes record
+    # into disjoint tenant=/slo_class= series); gate on the median
+    # relative error across tenants — the documented P² bound is for
+    # smooth unimodal shapes, and an outage-straddling tenant's latency
+    # is legitimately bimodal
+    rels = []
+    for row in metrics.collect():
+        if row["name"] != "request_latency_s":
+            continue
+        rep = report_on.tenant(row["labels"]["tenant"])
+        exact = percentile([q.latency for q in rep.records
+                            if np.isfinite(q.t_done)], 99)
+        rels.append(abs(row["p99"] - exact) / max(exact, 1e-12))
+    med, worst = float(np.median(rels)), float(np.max(rels))
+    emit("obs/sketch_p99", 0.0,
+         f"tenants={len(rels)};median_rel_err={med * 100:.1f}%;"
+         f"worst_rel_err={worst * 100:.1f}%;"
+         f"gate_median_le_15pct={int(med <= 0.15)}")
+
+    # offline analyzer: p99 critical path, segments must sum to latency
+    cp = critical_path(tracer.events, q=99.0)
+    seg_sum = sum(d for _, d in cp.path.segments)
+    err = abs(seg_sum - cp.path.latency)
+    segs = ";".join(f"{name}={dur * 1e6:.0f}us"
+                    for name, dur in cp.path.segments)
+    emit("obs/critpath", cp.path.latency * 1e6,
+         f"rid={cp.path.rid};tenant={cp.path.tenant};{segs};"
+         f"gate_sums={int(err <= 1e-9)}")
+
+
+def main() -> None:
+    """Benchmark entry point (benchmarks/run.py contract)."""
+    obs_overhead()
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.bench_fastpath",       # fused fast path: serial vs fused vs int8
     "benchmarks.bench_serving",        # continuous-batching engine + chaos
     "benchmarks.bench_fleet",          # multi-tenant fleet: shared spare pool
+    "benchmarks.bench_obs",            # tracing/metrics overhead + validity
     "benchmarks.bench_coding",         # replicate-K vs coded-(n,k) redundancy
     "benchmarks.bench_coded_compute",  # first-k compute shards vs stragglers
     "benchmarks.bench_failout",        # failout vs failure-blind distillation

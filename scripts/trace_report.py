@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Offline analyzer for traces recorded by :mod:`repro.obs.trace`.
+
+Loads a Chrome trace-format JSON (``Tracer.dump_chrome``) or JSONL
+(``Tracer.dump_jsonl``) file and prints
+
+- the **critical path** of the request nearest a latency percentile
+  (default p99), decomposed into named segments — ``batch_wait``,
+  ``share_wait``, ``service`` / ``merge_tail`` — that sum to its
+  measured latency, and
+- the **failure/repair timeline**: chaos ticks, controller failure
+  observations, repair / re-encode / replan spans with their plan-epoch
+  bumps, spare-pool claims and autoscale actions in virtual-time order.
+
+Usage:  python scripts/trace_report.py TRACE [-q PCT] [--timeline-limit N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.report import load_trace, render_report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    """Parse arguments, load the trace, print the report."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help=".trace.json (Chrome) or .jsonl file")
+    ap.add_argument("-q", "--percentile", type=float, default=99.0,
+                    help="latency percentile to decompose (default 99)")
+    ap.add_argument("--timeline-limit", type=int, default=30,
+                    help="max timeline rows to print (default 30; "
+                         "0 = unlimited)")
+    args = ap.parse_args(argv)
+    events = load_trace(args.trace)
+    limit = args.timeline_limit if args.timeline_limit > 0 else None
+    print(render_report(events, q=args.percentile, timeline_limit=limit))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

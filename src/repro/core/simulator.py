@@ -43,6 +43,7 @@ import numpy as np
 from repro.core.grouping import Device
 from repro.core.plan_ir import PlanIR
 from repro.core.planner import Plan
+from repro.obs.stats import percentile
 
 
 @dataclasses.dataclass
@@ -330,8 +331,7 @@ def _stats(latency: np.ndarray, arrived: np.ndarray, trials: int
     completes = int(arrived.all(axis=1).sum())
     return {
         "mean_latency": float(np.mean(lats)) if len(lats) else float("inf"),
-        "p99_latency": float(np.percentile(lats, 99)) if len(lats)
-        else float("inf"),
+        "p99_latency": percentile(lats, 99),
         "mean_coverage": float(np.mean(covs)),
         "complete_rate": completes / trials,
     }
@@ -351,7 +351,7 @@ def simulate_loop(plan: Plan, trials: int = 100, seed: int = 0,
         completes += int(r.complete)
     return {
         "mean_latency": float(np.mean(lats)) if lats else float("inf"),
-        "p99_latency": float(np.percentile(lats, 99)) if lats else float("inf"),
+        "p99_latency": percentile(lats, 99),
         "mean_coverage": float(np.mean(covs)),
         "complete_rate": completes / trials,
     }

@@ -106,6 +106,10 @@ class ClusterController:
         self.down: Set[str] = set()
         self.history: List[RepairOutcome] = []
         self._pending: Optional[Set[str]] = None
+        # optional obs plane, wired by the owning engine (repair spans
+        # stamp off tracer.now — the controller holds no clock)
+        self.tracer = None
+        self.trace_name = ""
         # assignment snapshot last reported to the broker — notify() sends
         # set diffs, so this must track exactly what the broker believes
         self._broker_view: Set[str] = self._assigned_names(self.ir)
@@ -133,7 +137,12 @@ class ClusterController:
         set differs from the last applied one (a later poll may repair)."""
         down = set(down_names)
         self._pending = down
-        return down != self.down
+        changed = down != self.down
+        if self.tracer is not None and changed:
+            self.tracer.instant("failure_observed",
+                                f"{self.trace_name}controller",
+                                down=sorted(down))
+        return changed
 
     def poll(self) -> Optional[RepairOutcome]:
         """Apply the newest deferred down-set, if any. The continuous
@@ -392,10 +401,23 @@ class ClusterController:
         return out
 
     def _apply(self, out: RepairOutcome) -> None:
+        tr, span = self.tracer, None
+        if tr is not None:
+            # the repair span brackets the whole adoption — server
+            # migration, the plan-epoch bump (history append), and the
+            # broker settlement — so its seq window certifies ordering
+            span = tr.begin(
+                out.kind, f"{self.trace_name}controller",
+                feasible=bool(out.feasible),
+                moved=list(out.moved_devices),
+                redeployed=int(out.redeployed),
+                reencoded=list(getattr(out, "reencoded_shares", ()) or ()))
         self.ir = out.ir
         if self.server is not None:
             self.server.migrate(out.ir, out.mapping)
         self.history.append(out)
+        if tr is not None:
+            tr.instant("plan_epoch", span.track, epoch=len(self.history))
         if self.spare_broker is not None:
             now_assigned = self._assigned_names(out.ir)
             claimed = now_assigned - self._broker_view
@@ -407,6 +429,11 @@ class ClusterController:
             if claimed or freed:
                 self.spare_broker.notify(self, claimed, freed)
             self._broker_view = now_assigned
+        if tr is not None:
+            tr.end(span, epoch=len(self.history),
+                   objective=float(out.objective),
+                   wall_s=float(out.wall_s),
+                   rejitted=len(out.rejitted_slots))
 
     def plan_repair(self, alive: np.ndarray, *,
                     spare_candidates: Optional[Set[str]] = None

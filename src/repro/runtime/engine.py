@@ -43,6 +43,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.simulator import FailureModel
+from repro.obs.stats import percentile, throughput
 from repro.runtime.clock import EPS, CloseTimer, EventQueue, periodic_ticks
 from repro.runtime.serving import QuorumServer
 
@@ -152,9 +153,9 @@ class EngineReport:
         t1 = max(r.t_done for r in done)
         return {
             "n": len(done),
-            "throughput": len(done) / max(t1 - t0, 1e-12),
-            "p50": float(np.percentile(lats, 50)),
-            "p99": float(np.percentile(lats, 99)),
+            "throughput": throughput(len(done), t0, t1),
+            "p50": percentile(lats, 50),
+            "p99": percentile(lats, 99),
             "slo_attainment": float(np.mean(lats <= self.slo)),
             "quorum_rate": float(np.mean([r.quorum_ok for r in done])),
             # fraction of answers served with any zeroed portion (missed
@@ -237,6 +238,19 @@ class ServingEngine:
                 stochastic outages).
     make_input: ``(rng, rows) -> jnp.ndarray`` request payload factory
                 (default: cached standard-normal ``(rows, input_dim)``).
+    tracer:     optional :class:`repro.obs.trace.Tracer`. When attached
+                (here or any time before :meth:`run`), the engine records
+                per-request spans (arrival → batch_wait → dispatch →
+                service → quorum_complete/degraded, terminal ``shed`` on
+                admission rejection), batch spans, chaos instants and —
+                through the wired controller/server — repair and migrate
+                events, all on the virtual clock. ``None`` (default) is
+                the zero-overhead path: runs are bit-identical to an
+                uninstrumented build.
+    metrics:    optional :class:`repro.obs.metrics.MetricsRegistry`;
+                latency/share histograms and admission counters land
+                under :attr:`metric_labels` (fleet lanes set tenant +
+                SLO-class labels).
     """
 
     def __init__(self, server: QuorumServer,
@@ -244,7 +258,8 @@ class ServingEngine:
                  controller=None, injector=None,
                  failure_for: Optional[Callable[[Set[str]], Any]] = None,
                  make_input: Optional[Callable[[np.random.Generator, int],
-                                               Any]] = None):
+                                               Any]] = None,
+                 tracer=None, metrics=None):
         self.server = server
         self.cfg = config or EngineConfig()
         self.controller = controller
@@ -260,6 +275,81 @@ class ServingEngine:
         self.plan_epoch = 0
         self.migrations: List[Tuple[float, Any]] = []
         self.futures: List[ShareFuture] = []
+        self.tracer = tracer
+        self.metrics = metrics
+        self.trace_name = ""            # track prefix, e.g. "t03/" in fleets
+        self.metric_labels: Dict[str, str] = {}
+        self._req_spans: Dict[int, Tuple[Any, Any]] = {}
+
+    # -- observability -------------------------------------------------------
+
+    def _wire_tracer(self) -> None:
+        """Propagate the obs plane to the controller and server so repair
+        and migrate events land on the same trace under this engine's
+        track prefix. Idempotent; a ``None`` tracer un-wires."""
+        if self.controller is not None:
+            self.controller.tracer = self.tracer
+            self.controller.trace_name = self.trace_name
+        self.server.tracer = self.tracer
+        self.server.trace_name = self.trace_name
+
+    def _trace_arrival(self, r: RequestRecord, now: float) -> None:
+        """Open the request's root span and its batch-wait child."""
+        track = f"{self.trace_name}req/{r.rid}"
+        root = self.tracer.begin("request", track, t=now, rid=r.rid,
+                                 size=r.size)
+        wait = self.tracer.begin("batch_wait", track, t=now)
+        self._req_spans[r.rid] = (root, wait)
+
+    def _shed(self, r: RequestRecord, now: float) -> None:
+        """SLO admission rejection: mark the record and close the
+        request's spans with a terminal zero-duration ``shed`` span.
+        Shared by the engine's admission closure and the fleet lanes."""
+        r.rejected = True
+        tr = self.tracer
+        if tr is not None:
+            spans = self._req_spans.pop(r.rid, None)
+            if spans is not None:
+                root, wait = spans
+                tr.end(wait, t=now, outcome="shed")
+                tr.complete("shed", root.track, now, now, rid=r.rid)
+                tr.end(root, t=now, outcome="shed")
+        if self.metrics is not None:
+            self.metrics.counter("requests_shed", **self.metric_labels).inc()
+
+    def _trace_dispatch(self, now: float, reqs: List[RequestRecord],
+                        bid: int, done_t: float, rows: int,
+                        service: float) -> None:
+        """Close every dispatched request's batch-wait, record its service
+        span and terminal outcome, and record the batch span itself."""
+        tr = self.tracer
+        tr.complete("batch", f"{self.trace_name}batches", now, done_t,
+                    bid=bid, n_requests=len(reqs), rows=rows,
+                    plan_epoch=self.plan_epoch, service_s=service)
+        for r in reqs:
+            spans = self._req_spans.pop(r.rid, None)
+            if spans is None:
+                continue
+            root, wait = spans
+            outcome = "quorum_complete" if r.quorum_ok else "degraded"
+            tr.end(wait, t=now, batch=bid)
+            tr.complete("service", root.track, now, done_t, batch=bid,
+                        plan_epoch=r.plan_epoch)
+            tr.instant(outcome, root.track, t=done_t)
+            tr.end(root, t=done_t, outcome=outcome,
+                   quorum_ok=r.quorum_ok, degraded=r.degraded,
+                   batch=bid, plan_epoch=r.plan_epoch)
+
+    def _record_metrics(self, reqs: List[RequestRecord]) -> None:
+        """Fold one dispatched batch into the latency/quorum metrics."""
+        m = self.metrics
+        lab = self.metric_labels
+        h = m.histogram("request_latency_s", **lab)
+        for r in reqs:
+            h.observe(r.latency)
+        m.counter("requests_served", **lab).inc(len(reqs))
+        m.counter("requests_degraded", **lab).inc(
+            sum(1 for r in reqs if r.degraded))
 
     # -- request payloads ----------------------------------------------------
 
@@ -369,7 +459,34 @@ class ServingEngine:
                     (now + float(t), idx) for t in t_sh[finite])
         batch = BatchRecord(bid, now, done_t, len(reqs), rows,
                             self.plan_epoch, service)
+        if self.tracer is not None:
+            self._trace_dispatch(now, reqs, bid, done_t, rows, service)
+        if self.metrics is not None:
+            self._record_metrics(reqs)
         return done_t, batch, share_events
+
+    def _share_event(self, fut_idx: int, now: float) -> None:
+        """One coded share's arrival on the virtual clock — the
+        cancel-on-first-k bookkeeping shared verbatim by the engine loop
+        and the fleet loop: the k-th pop completes the future (and closes
+        its ``share_wait`` span), later pops count as cancelled."""
+        fut = self.futures[fut_idx]
+        if fut.arrived < fut.k:
+            fut.arrived += 1
+            if fut.arrived == fut.k:
+                fut.t_complete = now
+                if self.tracer is not None:
+                    self.tracer.complete(
+                        "share_wait",
+                        f"{self.trace_name}req/{fut.rid}/coded/g{fut.group}",
+                        fut.t_issue, now, rid=fut.rid, group=fut.group,
+                        k=fut.k, n=fut.n)
+                if self.metrics is not None:
+                    self.metrics.histogram(
+                        "share_recovery_s", **self.metric_labels).observe(
+                        fut.recovery_latency)
+        else:
+            fut.cancelled += 1
 
     # -- event loop ----------------------------------------------------------
 
@@ -384,6 +501,8 @@ class ServingEngine:
         self.migrations = []
         self.futures = []
         self._down = set()          # each run re-derives its own chaos state
+        self._req_spans = {}
+        self._wire_tracer()
         saved_failure = self.server.failure
         try:
             return self._run(times, sizes)
@@ -436,7 +555,7 @@ class ServingEngine:
                 for rid in queue:
                     if now - records[rid].t_arrival + pred \
                             > self.cfg.slo + EPS:
-                        records[rid].rejected = True
+                        self._shed(records[rid], now)
                 queue.clear()
                 queue.extend(survivors)
 
@@ -460,10 +579,15 @@ class ServingEngine:
                 timer.arm(records[queue[0]].t_arrival + self.cfg.max_wait,
                           now)
 
+        tr = self.tracer
         while events:
             now, kind, payload = events.pop()
+            if tr is not None:
+                tr.now = now       # clock-less components stamp off this
             if kind == ARRIVE:
                 queue.append(payload)
+                if tr is not None:
+                    self._trace_arrival(records[payload], now)
                 try_dispatch(now)
             elif kind == CLOSE:
                 timer.fired(now)
@@ -475,15 +599,12 @@ class ServingEngine:
                 # cancel-on-first-k: the k-th arrival completes the future;
                 # a share popping after that was in flight when the answer
                 # completed — it is the cancelled speculative work
-                fut = self.futures[payload]
-                if fut.arrived < fut.k:
-                    fut.arrived += 1
-                    if fut.arrived == fut.k:
-                        fut.t_complete = now
-                else:
-                    fut.cancelled += 1
+                self._share_event(payload, now)
             else:                                    # CHAOS
                 down = set(self.injector.tick())
+                if tr is not None:
+                    tr.instant("chaos_tick", f"{self.trace_name}chaos",
+                               t=now, down=sorted(down))
                 if self.controller is not None:
                     self.controller.observe_deferred(down)
                 else:

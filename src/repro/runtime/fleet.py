@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.obs.stats import throughput
 from repro.runtime.clock import EPS, CloseTimer, EventQueue, periodic_ticks
 from repro.runtime.controller import ClusterController
 from repro.runtime.engine import (ARRIVE, CHAOS, CLOSE, DONE, SHARE,
@@ -118,6 +119,9 @@ class SparePoolBroker:
         self.free: Set[str] = set(pool_names)
         self.owner: Dict[str, Any] = {}
         self.log: List[Tuple[str, str, Any]] = []   # (op, name, shard)
+        # optional obs plane (wired by FleetEngine.run): claim/free
+        # instants land on the fleet/spares track, stamped off tracer.now
+        self.tracer = None
 
     def candidates(self, shard) -> Set[str]:
         """Spare names ``shard`` may claim right now (the free set)."""
@@ -131,15 +135,22 @@ class SparePoolBroker:
         if stolen:
             raise RuntimeError(
                 f"spare(s) {sorted(stolen)} double-claimed: already owned")
+        tenant = getattr(shard, "trace_name", "").rstrip("/")
         for n in sorted(claimed):
             self.free.discard(n)
             self.owner[n] = shard
             self.log.append(("claim", n, shard))
+            if self.tracer is not None:
+                self.tracer.instant("spare_claim", "fleet/spares",
+                                    device=n, tenant=tenant)
         for n in sorted(freed):
             if self.owner.get(n, shard) is shard:
                 self.owner.pop(n, None)
                 self.free.add(n)
                 self.log.append(("free", n, shard))
+                if self.tracer is not None:
+                    self.tracer.instant("spare_free", "fleet/spares",
+                                        device=n, tenant=tenant)
 
     def held_by(self, shard) -> Set[str]:
         """Spare names currently owned by ``shard``."""
@@ -303,7 +314,7 @@ class _Lane:
         if len(survivors) != len(queue):
             for rid in queue:
                 if now - records[rid].t_arrival + pred > self.cfg.slo + EPS:
-                    records[rid].rejected = True
+                    self.engine._shed(records[rid], now)
             queue.clear()
             queue.extend(survivors)
 
@@ -413,6 +424,9 @@ class Autoscaler:
         lane.engine.plan_epoch += 1
         self.adopted.setdefault(lane.tenant.name, []).append(pick)
         self.actions.append((now, lane.tenant.name, "scale_up", pick))
+        if lane.engine.tracer is not None:
+            lane.engine.tracer.instant("scale_up", "fleet/autoscale", t=now,
+                                       tenant=lane.tenant.name, device=pick)
         return True
 
     def _shrink(self, now: float, lane: _Lane) -> bool:
@@ -434,6 +448,10 @@ class Autoscaler:
         lane.engine.plan_epoch += 1
         self.adopted[lane.tenant.name].pop()
         self.actions.append((now, lane.tenant.name, "scale_down", name))
+        if lane.engine.tracer is not None:
+            lane.engine.tracer.instant("scale_down", "fleet/autoscale",
+                                       t=now, tenant=lane.tenant.name,
+                                       device=name)
         return True
 
 
@@ -463,8 +481,8 @@ class FleetReport:
         if done:
             t0 = min(r.t_arrival for r in done)
             t1 = max(r.t_done for r in done)
-            span = max(t1 - t0, 1e-12)
-            rps, good_rps = len(done) / span, len(good) / span
+            rps = throughput(len(done), t0, t1)
+            good_rps = throughput(len(good), t0, t1)
         else:
             rps = good_rps = 0.0
         p99s = [s["p99"] for s in per]
@@ -500,6 +518,18 @@ class FleetEngine:
     autoscaler: optional :class:`Autoscaler`; its config's ``every`` sets
                 the SCALE tick cadence.
     chaos_every: injector tick cadence on the fleet clock (virtual s).
+    tracer:     optional :class:`repro.obs.trace.Tracer` — threaded into
+                every lane engine (per-request spans under a
+                ``<tenant>/`` track prefix), the tenant controllers and
+                servers, the spare broker (claim/free instants on
+                ``fleet/spares``), plus router decisions
+                (``fleet/router``) and autoscale actions
+                (``fleet/autoscale``). May also be attached after
+                construction, any time before :meth:`run`. ``None`` keeps
+                runs bit-identical to an uninstrumented build.
+    metrics:    optional :class:`repro.obs.metrics.MetricsRegistry` —
+                lane histograms/counters are scoped by ``tenant=`` and
+                ``slo_class=`` labels.
     """
 
     def __init__(self, tenants: Sequence[TenantSpec], *,
@@ -507,7 +537,8 @@ class FleetEngine:
                  fleet_controller: Optional[FleetController] = None,
                  injector=None, capacity: Optional[int] = None,
                  autoscaler: Optional[Autoscaler] = None,
-                 chaos_every: Optional[float] = None, seed: int = 0):
+                 chaos_every: Optional[float] = None, seed: int = 0,
+                 tracer=None, metrics=None):
         self.tenants = list(tenants)
         self.router = router or FleetRouter()
         self.fleet_controller = fleet_controller
@@ -516,6 +547,8 @@ class FleetEngine:
         self.autoscaler = autoscaler
         self.chaos_every = chaos_every
         self.seed = seed
+        self.tracer = tracer
+        self.metrics = metrics
         if autoscaler is not None and fleet_controller is None:
             raise ValueError("autoscaling needs a FleetController "
                              "(it owns the spare pool)")
@@ -533,6 +566,17 @@ class FleetEngine:
         events = EventQueue()
         lanes = [_Lane(i, t, events, self.seed)
                  for i, t in enumerate(self.tenants)]
+        if self.tracer is not None or self.metrics is not None:
+            for lane in lanes:
+                eng = lane.engine
+                eng.tracer = self.tracer
+                eng.metrics = self.metrics
+                eng.trace_name = lane.tenant.name + "/"
+                eng.metric_labels = {"tenant": lane.tenant.name,
+                                     "slo_class": lane.tenant.slo.name}
+                eng._wire_tracer()
+            if self.fleet_controller is not None and self.tracer is not None:
+                self.fleet_controller.broker.tracer = self.tracer
         t_end = 0.0
         for lane, (times, sizes) in zip(lanes, traces):
             times = np.asarray(times, np.float64)
@@ -567,12 +611,18 @@ class FleetEngine:
     # -- internals -----------------------------------------------------------
 
     def _loop(self, events: EventQueue, lanes: List[_Lane]) -> None:
+        tr = self.tracer
         while events:
             now, kind, payload = events.pop()
+            if tr is not None:
+                tr.now = now
             if kind == ARRIVE:
                 ti, rid = payload
                 lanes[ti].queue.append(rid)
                 lanes[ti].last_busy = now
+                if tr is not None:
+                    lanes[ti].engine._trace_arrival(lanes[ti].records[rid],
+                                                    now)
                 self._dispatch_phase(now, events, lanes)
             elif kind == CLOSE:
                 lanes[payload].timer.fired(now)
@@ -582,15 +632,12 @@ class FleetEngine:
                 self._dispatch_phase(now, events, lanes)
             elif kind == SHARE:
                 ti, fut_idx = payload
-                fut = lanes[ti].engine.futures[fut_idx]
-                if fut.arrived < fut.k:
-                    fut.arrived += 1
-                    if fut.arrived == fut.k:
-                        fut.t_complete = now
-                else:
-                    fut.cancelled += 1
+                lanes[ti].engine._share_event(fut_idx, now)
             elif kind == CHAOS:
                 down = set(self.injector.tick())
+                if tr is not None:
+                    tr.instant("chaos_tick", "fleet/chaos", t=now,
+                               down=sorted(down))
                 for lane in lanes:
                     if lane.tenant.controller is not None:
                         lane.tenant.controller.observe_deferred(down)
@@ -611,7 +658,13 @@ class FleetEngine:
             ready = [ln for ln in lanes if ln.ready(now)]
             if not ready:
                 break
-            self.router.pick(ready, now).dispatch_one(now, events)
+            pick = self.router.pick(ready, now)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "route", "fleet/router", t=now,
+                    policy=self.router.policy, picked=pick.tenant.name,
+                    ready=[ln.tenant.name for ln in ready])
+            pick.dispatch_one(now, events)
         for lane in lanes:
             if lane.queue and not lane.due(now):
                 lane.timer.arm(

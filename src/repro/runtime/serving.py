@@ -67,6 +67,7 @@ track fan-out futures and count cancelled in-flight shares.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -248,6 +249,12 @@ class QuorumServer:
         default_factory=dict, init=False, repr=False)
     last_migration: Optional[Dict] = dataclasses.field(
         default=None, init=False, repr=False)
+
+    # optional obs plane (plain class attributes, not dataclass fields —
+    # the owning engine wires them; timestamps come from ``tracer.now``,
+    # the server holds no clock of its own)
+    tracer = None
+    trace_name = ""
 
     # -- compiled state ------------------------------------------------------
 
@@ -483,6 +490,25 @@ class QuorumServer:
     def serve_batch(self, xs: Sequence[jnp.ndarray], *,
                     rng: Optional[np.random.Generator] = None
                     ) -> List[ServeResult]:
+        """Serve R stacked requests — see :meth:`_serve_batch` for the
+        full contract. This thin shim adds the optional ``serve_batch``
+        trace span (dispatch wall time, request/row counts) when a tracer
+        is wired; with no tracer it is a tail call into the real path."""
+        if self.tracer is None:
+            return self._serve_batch(xs, rng=rng)
+        t0 = time.perf_counter()
+        out = self._serve_batch(xs, rng=rng)
+        t = self.tracer.now
+        self.tracer.complete(
+            "serve_batch", f"{self.trace_name}server", t, t,
+            requests=len(xs),
+            rows=int(sum(int(x.shape[0]) for x in xs)),
+            wall_us=(time.perf_counter() - t0) * 1e6)
+        return out
+
+    def _serve_batch(self, xs: Sequence[jnp.ndarray], *,
+                     rng: Optional[np.random.Generator] = None
+                     ) -> List[ServeResult]:
         """Serve R stacked requests. On the fused fast path this is ONE
         jitted dispatch (stacked portion forwards + device-side masking +
         quorum merge in a single compiled program); the legacy flag path
@@ -903,6 +929,12 @@ class QuorumServer:
                                "zeroed_slots": tuple(zeroed),
                                "fused_rows_rebuilt":
                                    tuple(refit) if fused_ok else ()}
+        if self.tracer is not None:
+            self.tracer.instant(
+                "migrate", f"{self.trace_name}server",
+                rejitted=list(rejit), refit=list(refit),
+                zeroed=list(zeroed),
+                reused=K_new - len(rejit) - len(zeroed))
         return self.last_migration
 
     def _migrated_stacked(self, new_fused: FusedStudents, srcs: List[int],

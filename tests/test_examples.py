@@ -91,3 +91,21 @@ def test_streaming_serving(monkeypatch):
     monkeypatch.setattr(mod, "MMPPArrivals",
                         short_horizon(mod.MMPPArrivals))
     mod.main()
+
+
+def test_traced_serving(monkeypatch, capsys):
+    mod = _load("traced_serving")
+
+    def short_horizon(cls):
+        class _Short(cls):
+            def generate(self, rng, horizon, *a, **kw):
+                return super().generate(rng, min(horizon, 0.08), *a, **kw)
+        return _Short
+
+    monkeypatch.setattr(mod, "MMPPArrivals",
+                        short_horizon(mod.MMPPArrivals))
+    mod.main()
+    out = capsys.readouterr().out
+    assert "critical path" in out
+    assert "failure/repair timeline" in out
+    assert "0 left open" in out
